@@ -1,0 +1,71 @@
+"""Fig 12 (runtime) + Fig 13 (I/O amount): SSSP / BFS / CC / SCAN (+PR) on
+every system, after a mixed-update ingest.  The cross-system metric is the
+bytes-moved I/O proxy + wall time."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analytics import (bfs, cc, materialize_csr, pagerank, scan_stats,
+                             sssp)
+from repro.analytics.view import CSRView
+
+from .common import Row, V, emit, graph_edges, io_read, make_systems
+
+
+def _view_from_baseline(sys_) -> CSRView:
+    voff, dst, prop = sys_.snapshot_csr()
+    return CSRView(voff=jnp.asarray(voff), dst=jnp.asarray(dst),
+                   prop=jnp.asarray(np.maximum(prop, 0.01)),
+                   n_vertices=V, n_edges=int(voff[-1]))
+
+
+def run() -> list:
+    src, dst = graph_edges(seed=1)
+    rows: list = []
+    systems = make_systems()
+    for name, sys_ in systems.items():
+        sys_.insert_edges(np.r_[src, dst], np.r_[dst, src])
+        sys_.delete_edges(np.r_[src[:500], dst[:500]],
+                          np.r_[dst[:500], src[:500]])
+
+    algos = {
+        "sssp": lambda v: sssp(v, int(src[0])),
+        "bfs": lambda v: bfs(v, int(src[0])),
+        "cc": cc,
+        "scan": scan_stats,
+        "pagerank": lambda v: pagerank(v, iters=10),
+    }
+    for name, sys_ in systems.items():
+        for aname, fn in algos.items():
+            r0 = io_read(sys_)
+            t0 = time.perf_counter()
+            if name == "lsmgraph":
+                snap = sys_.snapshot()
+                view = materialize_csr(snap, V)
+                out = fn(view)
+                jnp_block(out)
+                snap.release()
+            else:
+                view = _view_from_baseline(sys_)
+                out = fn(view)
+                jnp_block(out)
+            dt = time.perf_counter() - t0
+            rows.append((f"fig12_{aname}_{name}", dt * 1e6,
+                         f"io_bytes={io_read(sys_) - r0}"))
+    return rows
+
+
+def jnp_block(out) -> None:
+    import jax
+    jax.block_until_ready(out)
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Kernel microbenches: Pallas (interpret on CPU) vs jnp oracle wall time +
+the roofline-relevant derived quantities (bytes/flops per call)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import emit
+
+
+def _bench(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    e, v = 1 << 15, 1 << 12
+    seg = jnp.asarray(np.sort(rng.integers(0, v, e)).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, v, e).astype(np.int32))
+    wt = jnp.ones((e,), jnp.float32)
+    x = jnp.asarray(rng.normal(size=v).astype(np.float32))
+    t_k = _bench(lambda: ops.gather_segsum(dst, seg, wt, x, n_out=v))
+    t_r = _bench(lambda: ref.gather_segsum_ref(dst, seg, wt, x, v))
+    rows.append(("kernel_segsum_pallas", t_k * 1e6, f"E={e}"))
+    rows.append(("kernel_segsum_ref", t_r * 1e6, f"E={e}"))
+
+    b, hq, hkv, s, d = 1, 8, 2, 512, 128
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))
+    vv = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))
+    t_k = _bench(lambda: ops.attention(q, k, vv, use_pallas=True))
+    t_r = _bench(lambda: ref.mha_ref(q, k, vv))
+    fl = 4 * b * hq * s * s * d
+    rows.append(("kernel_attn_pallas", t_k * 1e6, f"flops={fl}"))
+    rows.append(("kernel_attn_ref", t_r * 1e6, f"flops={fl}"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Shared benchmark scaffolding.
+
+Every bench prints ``name,us_per_call,derived`` CSV rows (harness contract).
+`derived` carries the figure-specific metric (edges/s, bytes, ratio...).
+
+Scale defaults fit the 1-core CI container; set BENCH_SCALE=large for the
+paper-shaped runs (x10 edges).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+SCALE = 10 if os.environ.get("BENCH_SCALE") == "large" else 1
+V = 2000
+E = 30000 * SCALE
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0)
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def store_cfg():
+    from repro.core import StoreConfig
+    return StoreConfig(
+        vmax=V, mem_edges=1 << 12, seg_size=8, n_segments=1 << 12,
+        hash_slots=1 << 13, ovf_cap=1 << 13, batch_cap=1 << 10,
+        l0_run_limit=4, seg_target_edges=1 << 13)
+
+
+def make_systems():
+    from repro.baselines import (CSRInplace, LlamaSnapshots, LogAppend,
+                                 LSMKVStore)
+    from repro.core import LSMGraph
+    return {
+        "lsmgraph": LSMGraph(store_cfg()),
+        "csr_inplace": CSRInplace(V),
+        "lsm_kv": LSMKVStore(V, mem_cap=1 << 12),
+        "llama": LlamaSnapshots(V, epoch_edges=1 << 12),
+        "log_append": LogAppend(V),
+    }
+
+
+def graph_edges(seed=0):
+    from repro.data.graphgen import powerlaw_edges
+    return powerlaw_edges(V, E, seed=seed)
+
+
+def io_read(sys_) -> int:
+    return sys_.io.analytics_read if hasattr(sys_.io, "analytics_read") \
+        else sys_.io.read
+
+
+def io_write(sys_) -> int:
+    return sys_.io.total_write() if hasattr(sys_.io, "total_write") \
+        else sys_.io.write

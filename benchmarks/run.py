@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE=large for paper-shaped
+edge counts.  Individual benches: python -m benchmarks.bench_update etc.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_analytics, bench_index, bench_kernels,
+                   bench_memcache, bench_mixed, bench_space, bench_update)
+    suites = [
+        ("fig10/11 updates", bench_update.main),
+        ("fig12/13 analytics", bench_analytics.main),
+        ("fig14 space", bench_space.main),
+        ("fig15 memcache", bench_memcache.main),
+        ("fig16/17 index", bench_index.main),
+        ("fig18 mixed", bench_mixed.main),
+        ("kernels", bench_kernels.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, fn in suites:
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {label}: done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {label}: FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end LM training with fault injection + elastic restart.
+
+Trains a reduced qwen2-1.5b for 40 steps, kills it twice mid-run, and shows
+the loss trajectory is identical to an uninterrupted run (the checkpoint +
+deterministic-pipeline guarantee).
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import reduced_config
+from repro.data.pipeline import TokenPipeline
+from repro.launch.train import make_train_step
+from repro.models import init_params
+from repro.optim.adamw import adamw_init
+from repro.runtime.fault import FailureInjector, FaultTolerantLoop
+
+cfg = reduced_config("qwen2-1.5b")
+STEPS, BATCH, SEQ = 40, 4, 64
+
+
+def run(fail_at, ckpt_dir):
+    params = init_params(cfg, jax.random.key(0))
+    opt = adamw_init(params)
+    step_fn = make_train_step(cfg)
+    pipeline = TokenPipeline(vocab=cfg.vocab, seq_len=SEQ,
+                             global_batch=BATCH, seed=0)
+
+    def loop_step(state, batch):
+        p, o = state
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, loss = step_fn(p, o, b)
+        return (p, o), float(loss)
+
+    loop = FaultTolerantLoop(
+        step_fn=loop_step, init_state=(params, opt), pipeline=pipeline,
+        ckpt=CheckpointManager(ckpt_dir), ckpt_every=10,
+        injector=FailureInjector(fail_at))
+    loop.run(STEPS)
+    return loop
+
+
+d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+try:
+    clean = run((), d1)
+    faulty = run((17, 23), d2)
+    print(f"clean   loss: {clean.metrics[0]:.3f} -> {clean.metrics[STEPS-1]:.3f}")
+    print(f"faulty  loss: {faulty.metrics[0]:.3f} -> "
+          f"{faulty.metrics[STEPS-1]:.3f} (restarts={faulty.restarts})")
+    drift = max(abs(clean.metrics[s] - faulty.metrics[s])
+                for s in range(30, STEPS))
+    print(f"post-recovery trajectory drift: {drift:.2e} (exact replay)")
+finally:
+    shutil.rmtree(d1, ignore_errors=True)
+    shutil.rmtree(d2, ignore_errors=True)

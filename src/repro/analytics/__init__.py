@@ -1,0 +1,9 @@
+"""Graph analytics over LSMGraph snapshots (paper §5.3 workloads)."""
+from .view import CSRView, materialize_csr, multilevel_views
+from .algorithms import bfs, cc, pagerank, scan_stats, sssp
+from .multilevel import (multilevel_degree, multilevel_pagerank,
+                         multilevel_spmv)
+
+__all__ = ["CSRView", "materialize_csr", "multilevel_views", "bfs", "cc",
+           "pagerank", "scan_stats", "sssp", "multilevel_spmv",
+           "multilevel_degree", "multilevel_pagerank"]

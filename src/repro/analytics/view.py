@@ -1,0 +1,112 @@
+"""Analytics views over a pinned LSMGraph snapshot.
+
+Two read strategies (DESIGN.md §5):
+
+  * `materialize_csr` — exact merged live CSR at τ.  One sort over the
+    snapshot's visible records; every iteration of every algorithm then runs
+    at CSR speed.  This is the TPU analogue of the paper's observation that
+    CSR layout is what makes analytics fast — and the cost is one compaction-
+    sized sort, amortized over the (tens of) iterations an algorithm runs.
+
+  * `multilevel_views` — zero-merge per-run CSR views, consumed by
+    multilevel.py with the ± tombstone-annihilation trick (linear
+    aggregations) — the beyond-paper fast path.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.store import Snapshot
+from ..core.types import BYTES_PER_EDGE, BYTES_PER_PROP
+
+
+class CSRView(NamedTuple):
+    """Dense live CSR over vertex-id space [0, n_vertices)."""
+
+    voff: jnp.ndarray   # int32[V+1]
+    dst: jnp.ndarray    # int32[E]
+    prop: jnp.ndarray   # float32[E]
+    n_vertices: int
+    n_edges: int
+
+    @property
+    def degrees(self) -> jnp.ndarray:
+        return self.voff[1:] - self.voff[:-1]
+
+    def seg_ids(self) -> jnp.ndarray:
+        """Per-edge source id (inverse CSR), sorted by construction."""
+        e = jnp.arange(self.dst.shape[0], dtype=jnp.int32)
+        j = jnp.searchsorted(self.voff[1:], e, side="right").astype(jnp.int32)
+        return jnp.minimum(j, self.n_vertices - 1)
+
+
+def _collect(snapshot: Snapshot):
+    src_l, dst_l, ts_l, mk_l, pr_l = [], [], [], [], []
+    for (src, dst, ts, marker, prop, _fid) in snapshot.all_run_records():
+        src_l.append(src)
+        dst_l.append(dst)
+        ts_l.append(ts)
+        mk_l.append(marker)
+        pr_l.append(prop)
+    if not src_l:
+        z = np.zeros(0, np.int64)
+        return z, z, z, np.zeros(0, bool), np.zeros(0, np.float32)
+    return (np.concatenate(src_l).astype(np.int64),
+            np.concatenate(dst_l).astype(np.int64),
+            np.concatenate(ts_l).astype(np.int64),
+            np.concatenate(mk_l).astype(bool),
+            np.concatenate(pr_l).astype(np.float32))
+
+
+def materialize_csr(snapshot: Snapshot, n_vertices: int) -> CSRView:
+    """Exact live adjacency at snapshot.tau as one dense CSR."""
+    src, dst, ts, marker, prop = _collect(snapshot)
+    vis = ts <= snapshot.tau
+    src, dst, ts, marker, prop = (a[vis] for a in (src, dst, ts, marker, prop))
+    order = np.lexsort((ts, dst, src))
+    src, dst, ts, marker, prop = (a[order] for a in (src, dst, ts, marker,
+                                                     prop))
+    last = np.ones(len(src), bool)
+    if len(src):
+        last[:-1] = (src[:-1] != src[1:]) | (dst[:-1] != dst[1:])
+    live = last & ~marker
+    src, dst, prop = src[live], dst[live], prop[live]
+    voff = np.searchsorted(src, np.arange(n_vertices + 1)).astype(np.int32)
+    snapshot._store.io.analytics_read += len(src) * (
+        BYTES_PER_EDGE + BYTES_PER_PROP)
+    return CSRView(voff=jnp.asarray(voff), dst=jnp.asarray(dst, jnp.int32),
+                   prop=jnp.asarray(prop), n_vertices=n_vertices,
+                   n_edges=int(len(src)))
+
+
+class RunView(NamedTuple):
+    """One visible run as (seg-sorted) raw edges with ± annihilation weights."""
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    wt: jnp.ndarray   # +prop/+1 insert, -prop/-1 tombstone, 0 invisible
+
+
+def multilevel_views(snapshot: Snapshot, *, weighted: bool = False
+                     ) -> List[RunView]:
+    """Per-run views for merge-free linear aggregation (DESIGN.md §5).
+
+    Precondition (asserted by property tests): per (src, dst) key the record
+    history alternates insert/delete, so Σ(±) telescopes to live membership.
+    """
+    out: List[RunView] = []
+    for (src, dst, ts, marker, prop, _fid) in snapshot.all_run_records():
+        vis = ts <= snapshot.tau
+        base = prop if weighted else np.ones(len(src), np.float32)
+        wt = np.where(marker, -base, base) * vis
+        # CSR runs arrive src-sorted; MemGraph records are in arrival order —
+        # sort so the segment kernel's rank compression applies uniformly.
+        order = np.argsort(src, kind="stable")
+        out.append(RunView(src=jnp.asarray(src[order], jnp.int32),
+                           dst=jnp.asarray(dst[order], jnp.int32),
+                           wt=jnp.asarray(wt[order], jnp.float32)))
+        snapshot._store.io.analytics_read += int(vis.sum()) * BYTES_PER_EDGE
+    return out

@@ -1,0 +1,5 @@
+"""Fault-tolerant sharded checkpointing."""
+from .manager import CheckpointManager
+from .elastic import reshard_state
+
+__all__ = ["CheckpointManager", "reshard_state"]

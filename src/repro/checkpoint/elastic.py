@@ -1,0 +1,27 @@
+"""Elastic resharding: restore a checkpoint onto a different mesh.
+
+Checkpoints are stored UNSHARDED-logical (full arrays per leaf); placing them
+onto a new mesh is `jax.device_put(leaf, NamedSharding(new_mesh, spec))`.
+Elasticity therefore reduces to recomputing the sharding tree for the new
+topology — scaling from N to M data-parallel replicas needs no data
+transformation at all (ZeRO states are sharded views of the same logical
+arrays).  Batch-schedule continuity is the data pipeline's job (its state
+rides in the checkpoint manifest).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard_state(state, mesh: Mesh, spec_tree: Optional[Any] = None):
+    """Place a (host) state pytree onto `mesh` with the given specs
+    (replicated where spec_tree is None)."""
+    if spec_tree is None:
+        spec_tree = jax.tree.map(lambda _: P(), state)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        state, spec_tree,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))

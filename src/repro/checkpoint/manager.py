@@ -1,0 +1,140 @@
+"""Sharded, atomic, async-capable checkpoints (the restart half of fault
+tolerance).
+
+Layout per step:
+    <dir>/step_<N>.tmp/...   (written)
+    <dir>/step_<N>/          (atomic rename = commit)
+        manifest.json        — tree structure, shapes, dtypes, step metadata
+        shard_<k>.npz        — one file per host-shard (here: per leaf group)
+
+Guarantees exercised by tests/test_checkpoint.py:
+  * a kill between write and commit leaves the previous checkpoint intact;
+  * restore() returns bitwise-identical pytrees;
+  * data-pipeline state rides in the manifest so training resumes exactly;
+  * restore onto a DIFFERENT mesh goes through elastic.reshard_state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_fmt(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _fmt(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state, extra: Optional[Dict[str, Any]] = None,
+             shards: int = 4) -> str:
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(state)
+        keys = sorted(flat)
+        manifest = {
+            "step": step,
+            "extra": extra or {},
+            "leaves": {k: {"shape": list(flat[k].shape),
+                           "dtype": str(flat[k].dtype),
+                           "shard": i % shards}
+                       for i, k in enumerate(keys)},
+            "n_shards": shards,
+        }
+        for s in range(shards):
+            payload = {k.replace(_SEP, "__"): flat[k]
+                       for i, k in enumerate(keys)
+                       if i % shards == s}
+            np.savez(os.path.join(tmp, f"shard_{s}.npz"), **payload)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)               # atomic commit
+        self._gc()
+        return final
+
+    def save_async(self, step: int, state, **kw) -> None:
+        # Device->host transfer happens here (synchronously, consistent
+        # snapshot); file I/O overlaps with the next step.
+        flat_host = jax.tree.map(np.asarray, state)
+        self.wait()
+        self._async_thread = threading.Thread(
+            target=self.save, args=(step, flat_host), kwargs=kw, daemon=True)
+        self._async_thread.start()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return max(steps) if steps else None
+
+    def restore(self, template, step: Optional[int] = None):
+        """-> (state, extra).  `template` supplies the tree structure."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint found")
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        blobs: Dict[str, np.ndarray] = {}
+        for s in range(manifest["n_shards"]):
+            with np.load(os.path.join(path, f"shard_{s}.npz")) as z:
+                for k in z.files:
+                    blobs[k.replace("__", _SEP)] = z[k]
+        leaves_meta = manifest["leaves"]
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for p, leaf in paths:
+            key = _SEP.join(_fmt(x) for x in p)
+            arr = blobs[key]
+            want = leaves_meta[key]
+            assert list(arr.shape) == want["shape"], (key, arr.shape)
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)

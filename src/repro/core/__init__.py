@@ -1,0 +1,14 @@
+"""LSMGraph core — the paper's contribution as composable JAX modules."""
+from .types import (BYTES_PER_EDGE, BYTES_PER_PROP, INVALID_VID, CSRRunArrays,
+                    EdgeBatch, IOCounters, MemGraphState, RunFile, StoreConfig,
+                    Version)
+from .store import LSMGraph, Snapshot
+from .versions import VersionChain
+from . import csr, index, memgraph
+
+__all__ = [
+    "BYTES_PER_EDGE", "BYTES_PER_PROP", "INVALID_VID", "CSRRunArrays",
+    "EdgeBatch", "IOCounters", "MemGraphState", "RunFile", "StoreConfig",
+    "Version", "LSMGraph", "Snapshot", "VersionChain", "csr", "index",
+    "memgraph",
+]

@@ -1,0 +1,113 @@
+"""Concurrent LSMGraph (paper §4.3 'Concurrent Read and Write', Fig 18).
+
+Wraps the store with:
+  * an ingest queue drained by a writer thread (vertex-grained write safety
+    is inherent: batch inserts are functional array updates);
+  * a background compactor thread — flush and compaction happen off the
+    writer's critical path, exactly the paper's asynchronous compaction;
+  * reader API: `snapshot()` pins a consistent (version, index, runs, τ) view
+    at any time, including mid-compaction (immutability replaces the paper's
+    vertex-grained read-write locks — see DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from .store import LSMGraph, Snapshot
+from .types import StoreConfig
+from . import memgraph as mg_mod
+
+
+class ConcurrentLSMGraph:
+    def __init__(self, cfg: StoreConfig, drain_batch: int = 8):
+        self.store = LSMGraph(cfg)
+        self.store.on_flush_needed = lambda: self._compact_request.set()
+        self._q: "queue.Queue" = queue.Queue(maxsize=256)
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._compact_request = threading.Event()
+        self._writer = threading.Thread(target=self._writer_loop, daemon=True)
+        self._compactor = threading.Thread(
+            target=self._compactor_loop, daemon=True)
+        self._writer.start()
+        self._compactor.start()
+
+    # ------------------------------------------------------------------- API
+    def insert_edges(self, src, dst, prop=None) -> None:
+        self._check()
+        if self._stop.is_set():
+            raise RuntimeError("store is closed")
+        self._q.put(("insert", np.asarray(src), np.asarray(dst),
+                     None if prop is None else np.asarray(prop)))
+
+    def delete_edges(self, src, dst) -> None:
+        self._check()
+        if self._stop.is_set():
+            raise RuntimeError("store is closed")
+        self._q.put(("delete", np.asarray(src), np.asarray(dst), None))
+
+    def snapshot(self) -> Snapshot:
+        self._check()
+        return self.store.snapshot()
+
+    def flush(self) -> None:
+        """Block until all queued updates are applied (not compacted)."""
+        while not self._q.unfinished_tasks == 0:
+            self._check()
+            time.sleep(0.01)
+        self._check()
+
+    def close(self) -> None:
+        self.flush()
+        self._stop.set()
+        self._writer.join(timeout=10)
+        self._compactor.join(timeout=60)
+        self._check()
+
+    # --------------------------------------------------------------- threads
+    def _check(self) -> None:
+        if self._error is not None:
+            raise RuntimeError("background thread failed") from self._error
+
+    def _writer_loop(self) -> None:
+        store = self.store
+        while not self._stop.is_set():
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            try:
+                op, src, dst, prop = item
+                # Apply without triggering inline flush: the compactor owns
+                # flush+compaction so the writer returns to ingest quickly.
+                store._apply_no_flush(src, dst, prop, delete=(op == "delete"))
+                if mg_mod.memgraph_should_flush(store.mem, store.cfg):
+                    self._compact_request.set()
+            except BaseException as e:  # surface to callers
+                import traceback
+                traceback.print_exc()
+                self._error = e
+                self._stop.set()
+            finally:
+                self._q.task_done()
+
+    def _compactor_loop(self) -> None:
+        store = self.store
+        while not self._stop.is_set():
+            self._compact_request.wait(timeout=0.02)
+            self._compact_request.clear()
+            try:
+                # Poll regardless of the signal: the writer may be blocked
+                # mid-item on a hard-full cache waiting for exactly this.
+                if mg_mod.memgraph_should_flush(store.mem, store.cfg):
+                    store.flush_memgraph()  # includes L0 compaction + cascade
+            except BaseException as e:
+                import traceback
+                traceback.print_exc()
+                self._error = e
+                self._stop.set()

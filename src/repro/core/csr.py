@@ -1,0 +1,241 @@
+"""CSR run construction, lookup and merge (paper §2.2, §4.2.1).
+
+Every function here is pure and jit-able over fixed-capacity arrays.  A run is
+always sorted by (src, dst, ts); invalid slots carry src == INVALID_VID so they
+sort to the tail.  The k-way compaction merge is realized as concat + lexsort —
+on the TPU a bitonic sort of the concatenated runs is the fast path (DESIGN.md
+§2); the Pallas two-way merge kernel (kernels/merge.py) covers the common
+two-run case.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import INVALID_VID, CSRRunArrays
+
+
+def _lexsort_edges(src: jnp.ndarray, dst: jnp.ndarray, ts: jnp.ndarray) -> jnp.ndarray:
+    """Order: src asc, then dst asc, then ts asc. Returns permutation."""
+    return jnp.lexsort((ts, dst, src))
+
+
+@functools.partial(jax.jit, static_argnames=("vcap",))
+def build_run_arrays(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    ts: jnp.ndarray,
+    marker: jnp.ndarray,
+    prop: jnp.ndarray,
+    n: jnp.ndarray,
+    *,
+    vcap: int,
+) -> CSRRunArrays:
+    """Sort raw edges into a CSR run. Entries at positions >= n are ignored."""
+    ecap = src.shape[0]
+    pos = jnp.arange(ecap, dtype=jnp.int32)
+    valid = pos < n
+    src = jnp.where(valid, src, INVALID_VID)
+    order = _lexsort_edges(src, dst, ts)
+    src_s = src[order]
+    dst_s = jnp.where(valid[order], dst[order], 0)
+    ts_s = jnp.where(valid[order], ts[order], 0)
+    marker_s = jnp.where(valid[order], marker[order], False)
+    prop_s = jnp.where(valid[order], prop[order], 0.0)
+
+    vkeys = jnp.unique(src_s, size=vcap, fill_value=INVALID_VID)
+    # Pads are INVALID_VID; searchsorted('left') lands them on the first pad
+    # edge position == n, yielding empty slices — no masking needed.
+    voff = jnp.searchsorted(src_s, vkeys, side="left").astype(jnp.int32)
+    voff_full = jnp.concatenate([voff, n[None].astype(jnp.int32)])
+    nv = jnp.sum(vkeys != INVALID_VID).astype(jnp.int32)
+    return CSRRunArrays(
+        vkeys=vkeys.astype(jnp.int32), voff=voff_full,
+        dst=dst_s, ts=ts_s, marker=marker_s, prop=prop_s,
+        nv=nv, ne=n.astype(jnp.int32),
+    )
+
+
+@jax.jit
+def run_lookup(run: CSRRunArrays, v: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(found, start, end) of vertex v's edge slice. O(log nv) memory I/O —
+    the multi-level index path (index.py) replaces this with O(1)."""
+    i = jnp.searchsorted(run.vkeys, v).astype(jnp.int32)
+    i_c = jnp.minimum(i, run.vcap - 1)
+    found = run.vkeys[i_c] == v
+    start = run.voff[i_c]
+    end = run.voff[i_c + 1]
+    return found, jnp.where(found, start, 0), jnp.where(found, end, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def run_gather(run: CSRRunArrays, start: jnp.ndarray, end: jnp.ndarray, *, cap: int):
+    """Gather up to `cap` edge records from [start, end)."""
+    idx = start + jnp.arange(cap, dtype=jnp.int32)
+    m = idx < end
+    idx_c = jnp.minimum(idx, run.ecap - 1)
+    return (
+        jnp.where(m, run.dst[idx_c], INVALID_VID),
+        jnp.where(m, run.ts[idx_c], 0),
+        jnp.where(m, run.marker[idx_c], False),
+        jnp.where(m, run.prop[idx_c], 0.0),
+        m,
+    )
+
+
+def _gc_keep_mask(src: jnp.ndarray, dst: jnp.ndarray, ts: jnp.ndarray,
+                  marker: jnp.ndarray, valid: jnp.ndarray,
+                  tau_min: jnp.ndarray, is_bottom: bool) -> jnp.ndarray:
+    """Version-retention GC over (src,dst,ts)-sorted records (DESIGN.md §4).
+
+    1. Drop a record iff a newer record of the same (src,dst) exists with
+       ts <= tau_min (superseded before any live snapshot could see it).
+    2. PAIR ANNIHILATION: a newest-of-key tombstone (ts <= tau_min) is
+       dropped together with the insert it supersedes when the record
+       preceding that insert is absent or itself a delete — then nothing
+       deeper can be re-exposed (the key's deeper prefix necessarily ends
+       in a delete or never existed).  This keeps the multilevel ± analytics
+       invariant (Σ± per key == live count) exact across compactions for
+       alternating histories, while double-insert histories still retain
+       their tombstone for deep shadowing.
+    3. At the bottom level every dead newest-of-key tombstone drops.
+    """
+    nxt_same = (
+        valid
+        & jnp.roll(valid, -1)
+        & (src == jnp.roll(src, -1))
+        & (dst == jnp.roll(dst, -1))
+    )
+    nxt_same = nxt_same.at[-1].set(False)
+    nxt_ts = jnp.roll(ts, -1)
+    superseded = nxt_same & (nxt_ts <= tau_min)
+    keep = valid & ~superseded
+
+    newest = ~nxt_same
+    # prev_same[i]: record i-1 has the same key as i.
+    prev_same = jnp.roll(nxt_same, 1).at[0].set(False)
+    prev_marker = jnp.roll(marker, 1).at[0].set(False)
+    # prev2_same[i]: record i-2 has the same key as i-1.
+    prev2_same = jnp.roll(nxt_same, 2).at[:2].set(False)
+    prev2_marker = jnp.roll(marker, 2).at[:2].set(False)
+    # The paired insert (i-1) is first-of-key or preceded by a delete.
+    pair_safe = prev_same & ~prev_marker & (~prev2_same | prev2_marker)
+    dead_tomb = (marker & newest & (ts <= tau_min)
+                 & (pair_safe if not is_bottom else True))
+    if not is_bottom:
+        keep = keep & ~dead_tomb
+    else:
+        keep = keep & ~(marker & newest & (ts <= tau_min))
+    return keep
+
+
+@functools.partial(jax.jit, static_argnames=("vcap", "is_bottom"))
+def _merge_impl(src, dst, ts, marker, prop, valid, tau_min, *, vcap: int,
+                is_bottom: bool) -> CSRRunArrays:
+    src = jnp.where(valid, src, INVALID_VID)
+    order = _lexsort_edges(src, dst, ts)
+    src, dst, ts = src[order], dst[order], ts[order]
+    marker, prop, valid = marker[order], prop[order], valid[order]
+    keep = _gc_keep_mask(src, dst, ts, marker, valid, tau_min, is_bottom)
+    src = jnp.where(keep, src, INVALID_VID)
+    n = jnp.sum(keep).astype(jnp.int32)
+    # Stable compaction of survivors to a dense prefix.
+    order2 = jnp.argsort(~keep, stable=True)
+    src, dst, ts = src[order2], dst[order2], ts[order2]
+    marker, prop = marker[order2], prop[order2]
+    return build_run_arrays(src, dst, ts, marker, prop, n, vcap=vcap)
+
+
+def merge_runs(
+    runs: Sequence[CSRRunArrays],
+    tau_min: int,
+    *,
+    vcap: int,
+    is_bottom: bool = False,
+) -> CSRRunArrays:
+    """Vertex-aware compaction merge of k runs into one (paper Example 1).
+
+    The result keeps every version still visible to a snapshot >= tau_min and
+    annihilates superseded versions / dead tombstones.
+    """
+    src = jnp.concatenate([_expand_src(r) for r in runs])
+    dst = jnp.concatenate([r.dst for r in runs])
+    ts = jnp.concatenate([r.ts for r in runs])
+    marker = jnp.concatenate([r.marker for r in runs])
+    prop = jnp.concatenate([r.prop for r in runs])
+    valid = jnp.concatenate(
+        [jnp.arange(r.ecap, dtype=jnp.int32) < r.ne for r in runs]
+    )
+    return _merge_impl(src, dst, ts, marker, prop, valid,
+                       jnp.asarray(tau_min, jnp.int32),
+                       vcap=vcap, is_bottom=is_bottom)
+
+
+@jax.jit
+def _expand_src(run: CSRRunArrays) -> jnp.ndarray:
+    """Recover the per-edge src array from (vkeys, voff): src[e] = vkeys[j]
+    for voff[j] <= e < voff[j+1].  One searchsorted — the inverse of CSR."""
+    e = jnp.arange(run.ecap, dtype=jnp.int32)
+    j = jnp.searchsorted(run.voff[1:], e, side="right").astype(jnp.int32)
+    j = jnp.minimum(j, run.vcap - 1)
+    s = run.vkeys[j]
+    return jnp.where(e < run.ne, s, INVALID_VID)
+
+
+def run_slice_vertex_range(run: CSRRunArrays, lo: int, hi: int,
+                           *, vcap: int) -> CSRRunArrays:
+    """Extract the sub-run covering vertices in [lo, hi).  Used by partial
+    (per-segment) compaction to pull only the overlapping vertex range."""
+    src = _expand_src(run)
+    inside = (src >= lo) & (src < hi)
+    n = jnp.sum(inside).astype(jnp.int32)
+    order = jnp.argsort(~inside, stable=True)  # stable → keeps (src,dst,ts) order
+    return build_run_arrays(
+        src[order], run.dst[order], run.ts[order], run.marker[order],
+        run.prop[order], n, vcap=vcap,
+    )
+
+
+def empty_run(vcap: int, ecap: int) -> CSRRunArrays:
+    return CSRRunArrays(
+        vkeys=jnp.full((vcap,), INVALID_VID, jnp.int32),
+        voff=jnp.zeros((vcap + 1,), jnp.int32),
+        dst=jnp.zeros((ecap,), jnp.int32),
+        ts=jnp.zeros((ecap,), jnp.int32),
+        marker=jnp.zeros((ecap,), bool),
+        prop=jnp.zeros((ecap,), jnp.float32),
+        nv=jnp.asarray(0, jnp.int32),
+        ne=jnp.asarray(0, jnp.int32),
+    )
+
+
+def repad_run(run: CSRRunArrays, vcap: int, ecap: int) -> CSRRunArrays:
+    """Copy a run into (possibly smaller-capacity) fresh padding.  Host-level
+    utility to keep capacities in quantized buckets across compactions."""
+    def fit1(x, cap, fill):
+        if x.shape[0] == cap:
+            return x
+        if x.shape[0] > cap:
+            return x[:cap]
+        return jnp.concatenate(
+            [x, jnp.full((cap - x.shape[0],), fill, x.dtype)])
+    return CSRRunArrays(
+        vkeys=fit1(run.vkeys, vcap, INVALID_VID),
+        voff=fit1(run.voff, vcap + 1, run.voff[-1]),
+        dst=fit1(run.dst, ecap, 0),
+        ts=fit1(run.ts, ecap, 0),
+        marker=fit1(run.marker, ecap, False),
+        prop=fit1(run.prop, ecap, 0.0),
+        nv=run.nv, ne=run.ne,
+    )
+
+
+def quantize_cap(n: int, minimum: int = 256) -> int:
+    """Round up to a power-of-two bucket — bounds recompilation count."""
+    c = minimum
+    while c < n:
+        c <<= 1
+    return c

@@ -1,0 +1,603 @@
+"""LSMGraph store facade (paper §3.2 workflow, §4.2 multi-level CSR).
+
+Host-side orchestration over jit'd array ops:
+
+  write path:   insert/delete batches -> MemGraph (double-buffered) ->
+                flush to an L0 CSR run -> whole-L0 compaction into L1 ->
+                partial (per-segment-file) compaction L_i -> L_{i+1}
+  read path:    Snapshot pins (version, index arrays, run refs, τ);
+                neighbors() merges MemGraph + L0 runs (>= min readable fid)
+                + one CSR segment per L1+ level via the multi-level index,
+                with timestamp masking and tombstone annihilation.
+
+Every level holds an ordered list of CSR segment *files* with disjoint vertex
+ranges (L0: overlapping, ordered by fid) — the paper's segmentation — so
+partial compaction replaces only overlapping segment files.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import csr, index as mlindex, memgraph as mg_mod
+from .types import (BYTES_PER_EDGE, BYTES_PER_PROP, INVALID_VID, EdgeBatch,
+                    IOCounters, MemGraphState, RunFile, StoreConfig, Version)
+from .versions import VersionChain
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(x)
+
+
+class LSMGraph:
+    """Dynamic graph store: LSM-tree level structure over CSR runs."""
+
+    def __init__(self, cfg: StoreConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self._lock = threading.RLock()
+        self._flush_lock = threading.RLock()   # serializes flush pipelines
+        self._compact_lock = threading.RLock()  # serializes compactions
+        self.mem: MemGraphState = mg_mod.empty_memgraph(cfg)
+        self.mem_id = 0
+        # Second MemGraph slot: "two MemGraphs alternate" (paper §5.1); the
+        # full one is readable while the background thread flushes it.
+        self.mem_full: Optional[MemGraphState] = None
+        self.mem_full_id: Optional[int] = None
+        self._next_mem_id = 1
+        self.levels: List[List[RunFile]] = [[] for _ in range(cfg.n_levels)]
+        self.index = mlindex.empty_index(cfg.vmax, cfg.n_levels)
+        self.runs_by_fid: Dict[int, RunFile] = {}
+        self.versions = VersionChain()
+        self.io = IOCounters()
+        self.on_flush_needed = None  # callback for the concurrent wrapper
+        self._ts = 0
+        self._next_fid = 0
+        self._publish()
+
+    # ------------------------------------------------------------------ util
+    def _publish(self) -> Version:
+        mems = (self.mem_id,) + (
+            (self.mem_full_id,) if self.mem_full_id is not None else ())
+        l0 = tuple(r.fid for r in self.levels[0])
+        return self.versions.publish(mems, l0, self._ts)
+
+    def _new_fid(self) -> int:
+        f = self._next_fid
+        self._next_fid += 1
+        return f
+
+    @property
+    def tau(self) -> int:
+        return self._ts
+
+    def n_edges_cached(self) -> int:
+        return int(self.mem.ne)
+
+    # ----------------------------------------------------------------- write
+    def insert_edges(self, src, dst, prop=None) -> None:
+        self._apply(src, dst, prop, delete=False)
+
+    def delete_edges(self, src, dst) -> None:
+        """Deletion = tombstone record (annihilates at read & compaction)."""
+        self._apply(src, dst, None, delete=True)
+
+    def _apply_no_flush(self, src, dst, prop, *, delete: bool) -> None:
+        """Ingest without the inline flush trigger — the concurrent wrapper's
+        background compactor owns flush/compaction."""
+        self._apply(src, dst, prop, delete=delete, allow_flush=False)
+
+    def _apply(self, src, dst, prop, *, delete: bool,
+               allow_flush: bool = True) -> None:
+        src = np.asarray(src, np.int32).ravel()
+        dst = np.asarray(dst, np.int32).ravel()
+        if prop is None:
+            prop = np.zeros_like(src, dtype=np.float32)
+        else:
+            prop = np.asarray(prop, np.float32).ravel()
+        bc = self.cfg.batch_cap
+        for off in range(0, len(src), bc):
+            s, d, p = src[off:off + bc], dst[off:off + bc], prop[off:off + bc]
+            n = len(s)
+            if not allow_flush:
+                # Backstop for the concurrent wrapper: if the background
+                # compactor lags and the cache hits hard capacity, wait.
+                deadline = time.time() + 60.0
+                while self._mem_hard_full() and time.time() < deadline:
+                    if self.on_flush_needed is not None:
+                        self.on_flush_needed()
+                    time.sleep(0.001)
+                if self._mem_hard_full():
+                    raise RuntimeError(
+                        "background flush did not relieve a hard-full "
+                        "MemGraph within 60 s")
+            with self._lock:
+                ts = np.arange(self._ts, self._ts + n, dtype=np.int32)
+                self._ts += n
+                batch = EdgeBatch(
+                    src=jnp.asarray(_pad(s, bc)),
+                    dst=jnp.asarray(_pad(d, bc)),
+                    ts=jnp.asarray(_pad(ts, bc)),
+                    prop=jnp.asarray(_pad(p, bc)),
+                    marker=jnp.asarray(_pad(np.full(n, delete), bc)),
+                    n=jnp.asarray(n, jnp.int32),
+                )
+                self.mem, ok = mg_mod.insert_batch(
+                    self.mem, batch, mode=self.cfg.memcache_mode)
+                if not bool(ok):
+                    raise RuntimeError(
+                        "MemGraph capacity/hash overflow — raise mem caps")
+                if self.cfg.memcache_mode == "array_only":
+                    # Charge the compact-array growth movement the ablation
+                    # emulates: spilled edges imply copying the vertex's edges.
+                    self.io.flush_write += n  # nominal movement charge
+            if allow_flush and mg_mod.memgraph_should_flush(
+                    self.mem, self.cfg):
+                self.flush_memgraph()
+
+    def _mem_hard_full(self) -> bool:
+        return (
+            int(self.mem.ovf_n) >= self.cfg.ovf_cap - self.cfg.batch_cap
+            or int(self.mem.n_rows) >= self.cfg.n_segments - self.cfg.batch_cap
+            or int(self.mem.n_rows) >= int(0.72 * self.cfg.hash_slots)
+        )
+
+    # ----------------------------------------------------------------- flush
+    def flush_memgraph(self) -> Optional[RunFile]:
+        """MemGraph -> L0 CSR run, written directly without compaction
+        (paper: 'directly written to L0'); then maybe L0 compaction.
+
+        The sort/build runs outside the store lock: the full MemGraph is
+        double-buffered and immutable while the fresh one takes writes
+        (paper §5.1: 'two MemGraphs alternate')."""
+        with self._flush_lock:
+            with self._lock:
+                if int(self.mem.ne) == 0:
+                    return None
+                # Rotate double buffer: full MemGraph stays readable.
+                self.mem_full, self.mem_full_id = self.mem, self.mem_id
+                self.mem = mg_mod.empty_memgraph(self.cfg)
+                self.mem_id = self._next_mem_id
+                self._next_mem_id += 1
+                self._publish()
+            src, dst, ts, marker, prop, n = mg_mod.flush_arrays(self.mem_full)
+            cap = csr.quantize_cap(int(n))
+            run = csr.build_run_arrays(src, dst, ts, marker, prop, n, vcap=cap)
+            run = csr.repad_run(run, cap, cap)
+            with self._lock:
+                rf = self._wrap(run, level=0)
+                self.levels[0].append(rf)
+                self.index = mlindex.note_l0_flush(
+                    self.index, run.vkeys, run.nv,
+                    jnp.asarray(rf.fid, jnp.int32))
+                self.io.flush_write += rf.nbytes
+                self.io.index_write += int(run.nv) * 8
+                # Flush done: retire the full MemGraph from the version view.
+                self.mem_full, self.mem_full_id = None, None
+                self._publish()
+                need_compact = len(self.levels[0]) >= self.cfg.l0_run_limit
+        if need_compact:
+            self.compact_l0()
+        return rf
+
+    def _wrap(self, run: csr.CSRRunArrays, level: int) -> RunFile:
+        nv, ne = int(run.nv), int(run.ne)
+        if nv > 0:
+            vk = _np(run.vkeys[:nv])
+            min_v, max_v = int(vk[0]), int(vk[-1])
+        else:
+            min_v, max_v = 0, -1
+        rf = RunFile(fid=self._new_fid(), level=level, arrays=run,
+                     min_vid=min_v, max_vid=max_v, created_ts=self._ts,
+                     nv=nv, ne=ne)
+        self.runs_by_fid[rf.fid] = rf
+        return rf
+
+    # ------------------------------------------------------------ compaction
+    def compact_l0(self) -> None:
+        """Whole-L0 compaction (paper: all overlapping L0 CSRs merge in one
+        compaction to avoid re-compacting identical ranges).
+
+        The expensive merge runs OUTSIDE the store lock over immutable pinned
+        runs; only source selection and the metadata swap lock — so readers
+        snapshot freely during compaction (paper §4.3, Fig 18).
+        """
+        with self._compact_lock:
+            with self._lock:
+                l0 = [r for r in self.levels[0] if r.nv > 0]
+                l0_all = list(self.levels[0])
+                if not l0:
+                    self.levels[0] = []
+                    return
+                lo = min(r.min_vid for r in l0)
+                hi = max(r.max_vid for r in l0) + 1
+                overlap = [r for r in self.levels[1]
+                           if r.nv > 0 and r.min_vid < hi and r.max_vid >= lo]
+            self._merge_into(sources=l0, overlap=overlap, target_level=1,
+                             range_lo=lo, range_hi=hi,
+                             l0_max_fid=max(r.fid for r in l0),
+                             also_remove=l0_all)
+            self._maybe_cascade(1)
+
+    def compact_partial(self, level: int) -> None:
+        """Partial compaction: move ONE segment file of `level` down (paper
+        §4.2.1) — only overlapping target segments participate."""
+        with self._compact_lock:
+            with self._lock:
+                segs = self.levels[level]
+                if not segs:
+                    return
+                src_seg = max(segs, key=lambda r: r.ne)
+                lo, hi = src_seg.min_vid, src_seg.max_vid + 1
+                overlap = [r for r in self.levels[level + 1]
+                           if r.nv > 0 and r.min_vid < hi and r.max_vid >= lo]
+            self._merge_into(sources=[src_seg], overlap=overlap,
+                             target_level=level + 1, range_lo=lo, range_hi=hi,
+                             l0_max_fid=None, also_remove=[src_seg])
+            self._maybe_cascade(level + 1)
+
+    def _merge_into(self, *, sources: List[RunFile], overlap: List[RunFile],
+                    target_level: int, range_lo: int, range_hi: int,
+                    l0_max_fid: Optional[int],
+                    also_remove: List[RunFile]) -> None:
+        # ---- compute phase: no lock, immutable inputs ----
+        all_runs = [r.arrays for r in sources + overlap]
+        tot_e = sum(r.ne for r in sources + overlap)
+        self.io.compaction_read += sum(
+            r.nbytes for r in sources + overlap)
+        tau_min = self.versions.min_live_tau(self._ts)
+        vcap = csr.quantize_cap(max(tot_e, 1))
+        is_bottom = target_level == self.cfg.n_levels - 1
+        merged = csr.merge_runs(all_runs, tau_min, vcap=vcap,
+                                is_bottom=is_bottom)
+        new_segs = self._resegment(merged, target_level)
+        self.io.compaction_write += sum(r.nbytes for r in new_segs)
+        # ---- commit phase: short critical section ----
+        self._lock.acquire()
+        try:
+            self._commit_merge(sources=sources, overlap=overlap,
+                               new_segs=new_segs, merged_nv=int(merged.nv),
+                               target_level=target_level, range_lo=range_lo,
+                               range_hi=range_hi, l0_max_fid=l0_max_fid,
+                               also_remove=also_remove)
+        finally:
+            self._lock.release()
+
+    def _commit_merge(self, *, sources, overlap, new_segs, merged_nv,
+                      target_level, range_lo, range_hi, l0_max_fid,
+                      also_remove) -> None:
+        # Remove compacted source files from their level (runs flushed to L0
+        # during an in-flight compaction survive untouched).
+        src_level = target_level - 1
+        removed_fids = {r.fid for r in also_remove}
+        self.levels[src_level] = [
+            r for r in self.levels[src_level] if r.fid not in removed_fids]
+        # Replace overlapping target segments; keep disjoint ones untouched.
+        overlap_fids = {r.fid for r in overlap}
+        keep = [r for r in self.levels[target_level]
+                if r.fid not in overlap_fids]
+        self.levels[target_level] = sorted(
+            keep + new_segs, key=lambda r: r.min_vid)
+        # Index + vertex-grained version-control updates (paper §4.3): the new
+        # (fid, offset) per vertex, the cleared source level, and — for L0
+        # compactions — the min readable L0 fid = max involved fid + 1.
+        for seg in new_segs:
+            self.index = mlindex.note_compaction(
+                self.index, level=target_level,
+                new_vkeys=seg.arrays.vkeys, new_voff=seg.arrays.voff,
+                new_nv=seg.arrays.nv, new_fid=jnp.asarray(seg.fid, jnp.int32),
+                range_lo=jnp.asarray(seg.min_vid, jnp.int32),
+                range_hi=jnp.asarray(seg.max_vid + 1, jnp.int32),
+                l0_min_fid_update=jnp.asarray(
+                    l0_max_fid + 1 if l0_max_fid is not None else -1,
+                    jnp.int32),
+            )
+        if not new_segs:
+            # Everything annihilated: still clear the range + L0 visibility.
+            self.index = mlindex.note_compaction(
+                self.index, level=target_level,
+                new_vkeys=jnp.full((1,), INVALID_VID, jnp.int32),
+                new_voff=jnp.zeros((2,), jnp.int32),
+                new_nv=jnp.asarray(0, jnp.int32),
+                new_fid=jnp.asarray(INVALID_VID, jnp.int32),
+                range_lo=jnp.asarray(range_lo, jnp.int32),
+                range_hi=jnp.asarray(range_hi, jnp.int32),
+                l0_min_fid_update=jnp.asarray(
+                    l0_max_fid + 1 if l0_max_fid is not None else -1,
+                    jnp.int32),
+            )
+        # Ranges between [range_lo, range_hi) not covered by new segs were
+        # annihilated; note_compaction's range-clear handled only per-seg
+        # ranges above, so clear the gaps explicitly.
+        if new_segs:
+            covered = [(s.min_vid, s.max_vid + 1) for s in new_segs]
+            gaps = _range_gaps(range_lo, range_hi, covered)
+            for (glo, ghi) in gaps:
+                self.index = mlindex.note_compaction(
+                    self.index, level=target_level,
+                    new_vkeys=jnp.full((1,), INVALID_VID, jnp.int32),
+                    new_voff=jnp.zeros((2,), jnp.int32),
+                    new_nv=jnp.asarray(0, jnp.int32),
+                    new_fid=jnp.asarray(INVALID_VID, jnp.int32),
+                    range_lo=jnp.asarray(glo, jnp.int32),
+                    range_hi=jnp.asarray(ghi, jnp.int32),
+                    l0_min_fid_update=jnp.asarray(
+                        l0_max_fid + 1 if l0_max_fid is not None else -1,
+                        jnp.int32),
+                )
+        self.io.index_write += merged_nv * 8
+        for r in sources + overlap:
+            self.runs_by_fid.pop(r.fid, None)
+        self._publish()
+
+    def _resegment(self, merged: csr.CSRRunArrays, level: int) -> List[RunFile]:
+        """Split a merged run into segment files at vertex boundaries,
+        balancing sizes; a very high degree vertex gets its own segment
+        (paper §4.2.1).  The merged run is already (src, dst, ts)-sorted, so
+        each segment is a contiguous slice — no re-sorting."""
+        ne, nv = int(merged.ne), int(merged.nv)
+        if ne == 0:
+            return []
+        target = self.cfg.seg_target_edges
+        voff = _np(merged.voff[:nv + 1])
+        segs: List[RunFile] = []
+        start_v = 0
+        while start_v < nv:
+            # Largest end_v with <= target edges (always >= 1 vertex, so a
+            # high-degree vertex lands in its own segment file).
+            end_v = int(np.searchsorted(voff, voff[start_v] + target,
+                                        side="right")) - 1
+            end_v = min(max(end_v, start_v + 1), nv)
+            e_lo, e_hi = int(voff[start_v]), int(voff[end_v])
+            n_v, n_e = end_v - start_v, e_hi - e_lo
+            vcap, ecap = csr.quantize_cap(n_v), csr.quantize_cap(max(n_e, 1))
+            sub = csr.CSRRunArrays(
+                vkeys=merged.vkeys[start_v:end_v],
+                voff=merged.voff[start_v:end_v + 1] - e_lo,
+                dst=merged.dst[e_lo:e_hi], ts=merged.ts[e_lo:e_hi],
+                marker=merged.marker[e_lo:e_hi], prop=merged.prop[e_lo:e_hi],
+                nv=jnp.asarray(n_v, jnp.int32), ne=jnp.asarray(n_e, jnp.int32))
+            segs.append(self._wrap(csr.repad_run(sub, vcap, ecap), level=level))
+            start_v = end_v
+        return segs
+
+    def _maybe_cascade(self, level: int) -> None:
+        if level >= self.cfg.n_levels - 1:
+            return
+        with self._lock:
+            size = sum(r.ne for r in self.levels[level])
+        if size > self.cfg.level_capacity(level):
+            self.compact_partial(level)
+
+    # ------------------------------------------------------------------ read
+    def snapshot(self) -> "Snapshot":
+        with self._lock:
+            version = self.versions.pin_current(self._ts)
+            return Snapshot(self, version, tau=self._ts)
+
+    def query_edge(self, u: int, v: int) -> bool:
+        snap = self.snapshot()
+        try:
+            return int(v) in snap.neighbors(int(u))
+        finally:
+            snap.release()
+
+    # ----------------------------------------------------------------- stats
+    def level_sizes(self) -> List[int]:
+        return [sum(r.ne for r in lvl) for lvl in self.levels]
+
+    def disk_bytes(self) -> int:
+        """Space cost of all live runs + index (Fig 14)."""
+        run_bytes = sum(r.nbytes for lvl in self.levels for r in lvl)
+        return run_bytes + mlindex.index_nbytes_dense(
+            self.cfg.vmax, self.cfg.n_levels)
+
+
+def _pad(a: np.ndarray, n: int) -> np.ndarray:
+    if len(a) == n:
+        return a
+    out = np.zeros(n, a.dtype)
+    out[:len(a)] = a
+    return out
+
+
+def _range_gaps(lo: int, hi: int,
+                covered: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    gaps, cur = [], lo
+    for (clo, chi) in sorted(covered):
+        if clo > cur:
+            gaps.append((cur, clo))
+        cur = max(cur, chi)
+    if cur < hi:
+        gaps.append((cur, hi))
+    return gaps
+
+
+class Snapshot:
+    """A pinned consistent view (version + index arrays + run refs + τ).
+
+    Immutability makes the pin trivially consistent: compactions create new
+    arrays, never mutate pinned ones (DESIGN.md §4).
+    """
+
+    def __init__(self, store: LSMGraph, version: Version, tau: int):
+        self._store = store
+        self.version = version
+        self.tau = tau  # acquired at snapshot() time, NOT the publish τ
+        self.cfg = store.cfg
+        # Pin array references NOW — later store mutations are invisible.
+        self.index = store.index
+        self.mem_states: List[MemGraphState] = []
+        with store._lock:
+            if store.mem_id in version.memgraph_ids:
+                self.mem_states.append(store.mem)
+            if (store.mem_full_id is not None
+                    and store.mem_full_id in version.memgraph_ids):
+                self.mem_states.append(store.mem_full)
+            self.l0_runs: List[RunFile] = [
+                store.runs_by_fid[f] for f in version.l0_fids
+                if f in store.runs_by_fid]
+            self.level_runs: List[List[RunFile]] = [
+                list(lvl) for lvl in store.levels[1:]]
+        self.runs_by_fid = {r.fid: r
+                            for lvl in ([self.l0_runs] + self.level_runs)
+                            for r in lvl}
+        self._released = False
+
+    def release(self) -> None:
+        if not self._released:
+            self._store.versions.unpin(self.version.vid, self.tau)
+            self._released = True
+
+    def __enter__(self) -> "Snapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # -------------------------------------------------------------- raw runs
+    def all_run_records(self):
+        """(src, dst, ts, marker, prop) numpy record arrays of every visible
+        run incl. MemGraph tiers — the analytics fast path iterates these."""
+        recs = []
+        for mg in self.mem_states:
+            src, dst, ts, marker, prop, n = mg_mod.flush_arrays(mg)
+            n = int(n)
+            recs.append((_np(src)[:n], _np(dst)[:n], _np(ts)[:n],
+                         _np(marker)[:n], _np(prop)[:n], None))
+        for rf in self.l0_runs:
+            recs.append(_run_records(rf, min_fid_filter=True))
+        for lvl in self.level_runs:
+            for rf in lvl:
+                recs.append(_run_records(rf, min_fid_filter=False))
+        return recs
+
+    # ------------------------------------------------------------- neighbors
+    def neighbors(self, v: int, return_props: bool = False):
+        """Exact adjacency of v at τ: MemGraph first, then L0 runs with
+        fid >= max(first, min readable fid), then one (fid, offset) per L1+
+        level from the multi-level index (paper read workflow)."""
+        recs: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
+        cap = self.cfg.seg_size + self.cfg.ovf_cap  # max cacheable degree
+        for mg in self.mem_states:
+            d, t, m, p, mask = mg_mod.scan_vertex(
+                mg, jnp.asarray(v, jnp.int32), cap=cap)
+            mask = _np(mask)
+            recs.append((_np(d)[mask], _np(t)[mask], _np(m)[mask],
+                         _np(p)[mask]))
+        first_fid, min_fid, lvl_fid, lvl_off = (
+            int(self.index.l0_first_fid[v]), int(self.index.l0_min_fid[v]),
+            _np(self.index.lvl_fid[v]), _np(self.index.lvl_off[v]))
+        bytes_read = 0
+        for rf in self.l0_runs:
+            if rf.fid < min_fid or (first_fid != INVALID_VID
+                                    and rf.fid < first_fid):
+                continue
+            r = _gather_vertex(rf, v)
+            if r is not None:
+                recs.append(r)
+                bytes_read += len(r[0]) * (BYTES_PER_EDGE + BYTES_PER_PROP)
+        if self.cfg.use_multilevel_index:
+            for col in range(lvl_fid.shape[0]):
+                fid = int(lvl_fid[col])
+                if fid == INVALID_VID or fid not in self.runs_by_fid:
+                    continue
+                rf = self.runs_by_fid[fid]
+                r = _gather_vertex(rf, v, known_off=int(lvl_off[col]))
+                if r is not None:
+                    recs.append(r)
+                    bytes_read += len(r[0]) * (BYTES_PER_EDGE + BYTES_PER_PROP)
+        else:
+            # Ablation: no index — binary-search every segment file (the
+            # RocksDB-style path the paper's Fig 16 compares against).
+            for lvl in self.level_runs:
+                for rf in lvl:
+                    if rf.nv == 0 or not (rf.min_vid <= v <= rf.max_vid):
+                        continue
+                    r = _gather_vertex(rf, v)
+                    if r is not None:
+                        recs.append(r)
+                        bytes_read += len(r[0]) * (
+                            BYTES_PER_EDGE + BYTES_PER_PROP)
+        self._store.io.analytics_read += bytes_read
+        return _annihilate(recs, self.tau, return_props)
+
+    def degree(self, v: int) -> int:
+        return len(self.neighbors(v))
+
+    def edge_set(self) -> set:
+        """Full live edge set at τ (verification only — O(E))."""
+        out = set()
+        for v in self.vertices():
+            for d in self.neighbors(int(v)):
+                out.add((int(v), int(d)))
+        return out
+
+    def vertices(self) -> np.ndarray:
+        vs = set()
+        for (src, dst, ts, marker, prop, _) in self.all_run_records():
+            m = ts <= self.tau
+            vs.update(np.unique(src[m]).tolist())
+        return np.array(sorted(vs), np.int64)
+
+
+def _run_records(rf: RunFile, min_fid_filter: bool):
+    a = rf.arrays
+    ne = rf.ne
+    src = _np(csr._expand_src(a))[:ne]
+    return (src, _np(a.dst)[:ne], _np(a.ts)[:ne], _np(a.marker)[:ne],
+            _np(a.prop)[:ne], rf.fid)
+
+
+def _gather_vertex(rf: RunFile, v: int, known_off: Optional[int] = None):
+    a = rf.arrays
+    if rf.nv == 0:
+        return None
+    if known_off is None:
+        found, start, end = csr.run_lookup(a, jnp.asarray(v, jnp.int32))
+        if not bool(found):
+            return None
+        start, end = int(start), int(end)
+    else:
+        # Multi-level index gave the offset: O(1), no binary search.
+        start = known_off
+        vk = _np(a.vkeys)
+        nv = rf.nv
+        voff = _np(a.voff)
+        i = int(np.searchsorted(voff[:nv + 1], start, side="right")) - 1
+        end = int(voff[min(i + 1, nv)])
+        if i >= nv or int(vk[i]) != v:
+            return None
+    if end <= start:
+        return None
+    sl = slice(start, end)
+    return (_np(a.dst[sl]), _np(a.ts[sl]), _np(a.marker[sl]), _np(a.prop[sl]))
+
+
+def _annihilate(recs, tau: int, return_props: bool):
+    """Merge per-run records: newest ts <= τ wins per dst; tombstone hides."""
+    if not recs:
+        return (np.empty(0, np.int64), np.empty(0, np.float32)) \
+            if return_props else np.empty(0, np.int64)
+    dst = np.concatenate([r[0] for r in recs]).astype(np.int64)
+    ts = np.concatenate([r[1] for r in recs]).astype(np.int64)
+    marker = np.concatenate([r[2] for r in recs]).astype(bool)
+    prop = np.concatenate([r[3] for r in recs]).astype(np.float32)
+    m = ts <= tau
+    dst, ts, marker, prop = dst[m], ts[m], marker[m], prop[m]
+    if len(dst) == 0:
+        return (np.empty(0, np.int64), np.empty(0, np.float32)) \
+            if return_props else np.empty(0, np.int64)
+    order = np.lexsort((ts, dst))
+    dst, ts, marker, prop = dst[order], ts[order], marker[order], prop[order]
+    last = np.ones(len(dst), bool)
+    last[:-1] = dst[:-1] != dst[1:]
+    live = last & ~marker
+    if return_props:
+        return dst[live], prop[live]
+    return dst[live]

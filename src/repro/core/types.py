@@ -1,0 +1,210 @@
+"""Core pytree types and configuration for LSMGraph-on-TPU.
+
+Design rules (see DESIGN.md §4):
+  * every device structure is a NamedTuple of fixed-capacity arrays + scalar
+    fill counts, so all update/flush/compaction paths jit cleanly;
+  * host-side metadata (file ids, level numbers, byte accounting) lives in
+    plain dataclass wrappers that are never traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+# Sentinel for "no vertex" — vertex ids must be < INVALID_VID.
+INVALID_VID = jnp.iinfo(jnp.int32).max
+
+# Byte accounting mirroring the paper's on-disk edge body (dst, ts, prop_off,
+# marker) with 8-byte vids in the paper; we count 16 B of topology + 4 B of
+# property per edge, and 8 B per index entry.  Used only by the I/O-proxy and
+# space benchmarks — the in-memory arrays are int32/float32.
+BYTES_PER_EDGE = 16
+BYTES_PER_PROP = 4
+BYTES_PER_INDEX_ENTRY = 8
+
+
+class EdgeBatch(NamedTuple):
+    """A fixed-capacity batch of edge updates (insert or tombstone)."""
+
+    src: jnp.ndarray      # int32[BC]
+    dst: jnp.ndarray      # int32[BC]
+    ts: jnp.ndarray       # int32[BC] — globally unique, monotone per edge
+    prop: jnp.ndarray     # float32[BC]
+    marker: jnp.ndarray   # bool[BC] — True = deletion tombstone
+    n: jnp.ndarray        # int32[]  — number of valid leading entries
+
+
+class CSRRunArrays(NamedTuple):
+    """One immutable CSR run ("CSR file" in the paper, Fig. 6).
+
+    vkeys is the sorted list of distinct source vertices present (padded with
+    INVALID_VID); voff[i]:voff[i+1] bounds vertex vkeys[i]'s edges, which are
+    sorted by (dst, ts).  Properties are a parallel array = the paper's
+    separate property file.
+    """
+
+    vkeys: jnp.ndarray    # int32[Vc]
+    voff: jnp.ndarray     # int32[Vc+1]
+    dst: jnp.ndarray      # int32[Ec]
+    ts: jnp.ndarray       # int32[Ec]
+    marker: jnp.ndarray   # bool[Ec]
+    prop: jnp.ndarray     # float32[Ec]
+    nv: jnp.ndarray       # int32[] — valid vertices
+    ne: jnp.ndarray       # int32[] — valid edges
+
+    @property
+    def vcap(self) -> int:
+        return self.vkeys.shape[0]
+
+    @property
+    def ecap(self) -> int:
+        return self.dst.shape[0]
+
+
+@dataclasses.dataclass(eq=False)  # identity eq: arrays are not comparable
+class RunFile:
+    """Host wrapper: a CSR run plus the paper's file-header metadata."""
+
+    fid: int
+    level: int
+    arrays: CSRRunArrays
+    min_vid: int
+    max_vid: int
+    created_ts: int
+    nv: int
+    ne: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.ne * (BYTES_PER_EDGE + BYTES_PER_PROP)
+
+
+class MemGraphState(NamedTuple):
+    """MemGraph (paper §4.1): hashmap → fixed segments + overflow tier.
+
+    Low-degree vertices (≈95 %) live in one G-slot segment each; edges past G
+    go to the overflow append-log (the TPU stand-in for the paper's skip list:
+    deferred ordering via sort-on-flush — see DESIGN.md §2.1).
+    """
+
+    htab_key: jnp.ndarray   # int32[H]  — INVALID_VID = empty
+    htab_row: jnp.ndarray   # int32[H]
+    seg_owner: jnp.ndarray  # int32[NS]
+    seg_len: jnp.ndarray    # int32[NS] — true cached degree (may exceed G)
+    seg_dst: jnp.ndarray    # int32[NS, G]
+    seg_ts: jnp.ndarray     # int32[NS, G]
+    seg_marker: jnp.ndarray  # bool[NS, G]
+    seg_prop: jnp.ndarray   # float32[NS, G]
+    ovf_src: jnp.ndarray    # int32[Oc]
+    ovf_dst: jnp.ndarray    # int32[Oc]
+    ovf_ts: jnp.ndarray     # int32[Oc]
+    ovf_marker: jnp.ndarray  # bool[Oc]
+    ovf_prop: jnp.ndarray   # float32[Oc]
+    n_rows: jnp.ndarray     # int32[]
+    ovf_n: jnp.ndarray      # int32[]
+    ne: jnp.ndarray         # int32[]
+
+    @property
+    def hcap(self) -> int:
+        return self.htab_key.shape[0]
+
+    @property
+    def nseg(self) -> int:
+        return self.seg_owner.shape[0]
+
+    @property
+    def segsize(self) -> int:
+        return self.seg_dst.shape[1]
+
+    @property
+    def ovf_cap(self) -> int:
+        return self.ovf_src.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    """LSMGraph configuration (paper defaults: 64 MB MemGraph, T=10, 5 levels,
+    two alternating MemGraphs)."""
+
+    vmax: int = 1 << 16            # vertex-id space
+    # -- MemGraph --
+    mem_edges: int = 1 << 14       # P: flush threshold (edges)
+    seg_size: int = 8              # G: slots per low-degree segment
+    n_segments: int = 1 << 13      # NS: segment pool rows
+    hash_slots: int = 1 << 14      # H (power of two)
+    ovf_cap: int = 1 << 14         # Oc: overflow ("skip list") capacity
+    batch_cap: int = 1 << 12       # BC: max edges per vectorized insert
+    # -- levels --
+    n_levels: int = 5
+    level_factor: int = 10         # T
+    l0_run_limit: int = 4          # flushes before L0→L1 compaction
+    seg_target_edges: int = 1 << 15  # segment-file split target at L1+
+    # -- behaviour --
+    dedup_gc: bool = True          # drop superseded versions at compaction
+    use_multilevel_index: bool = True   # Fig. 16 ablation switch
+    memcache_mode: str = "memgraph"     # memgraph | array_only | skiplist_only
+
+    def level_capacity(self, level: int) -> int:
+        """Edge capacity of level i: P * T**i (L0 counts runs, not edges)."""
+        return self.mem_edges * (self.level_factor ** max(level, 1))
+
+    def validate(self) -> None:
+        assert self.hash_slots & (self.hash_slots - 1) == 0, "H must be 2^k"
+        assert self.n_segments * self.seg_size + self.ovf_cap >= self.mem_edges
+        assert self.batch_cap <= self.mem_edges
+        assert self.memcache_mode in ("memgraph", "array_only", "skiplist_only")
+
+
+@dataclasses.dataclass
+class IOCounters:
+    """Bytes-moved accounting — the I/O proxy for the paper's disk-I/O plots."""
+
+    flush_write: int = 0
+    compaction_read: int = 0
+    compaction_write: int = 0
+    analytics_read: int = 0
+    index_write: int = 0
+
+    def total_write(self) -> int:
+        return self.flush_write + self.compaction_write + self.index_write
+
+    def total(self) -> int:
+        return self.total_write() + self.compaction_read + self.analytics_read
+
+    def snapshot(self) -> "IOCounters":
+        return dataclasses.replace(self)
+
+    def delta(self, other: "IOCounters") -> "IOCounters":
+        return IOCounters(
+            flush_write=self.flush_write - other.flush_write,
+            compaction_read=self.compaction_read - other.compaction_read,
+            compaction_write=self.compaction_write - other.compaction_write,
+            analytics_read=self.analytics_read - other.analytics_read,
+            index_write=self.index_write - other.index_write,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Version:
+    """A readable view (paper §4.3): MemGraph ids + L0 file ids + snapshot τ.
+
+    L1+ visibility is carried by the multi-level index (vertex-grained), not
+    by the version chain — exactly the paper's split.
+    """
+
+    vid: int
+    memgraph_ids: Tuple[int, ...]
+    l0_fids: Tuple[int, ...]
+    tau: int
+
+
+def empty_batch(batch_cap: int) -> EdgeBatch:
+    z = jnp.zeros((batch_cap,), jnp.int32)
+    return EdgeBatch(
+        src=z, dst=z, ts=z,
+        prop=jnp.zeros((batch_cap,), jnp.float32),
+        marker=jnp.zeros((batch_cap,), bool),
+        n=jnp.asarray(0, jnp.int32),
+    )

@@ -1,0 +1,7 @@
+"""Data substrate: deterministic resumable LM pipeline + graph generators."""
+from .pipeline import TokenPipeline, PipelineState
+from .synthetic import synthetic_lm_batch
+from .graphgen import powerlaw_edges, rmat_edges, update_stream
+
+__all__ = ["TokenPipeline", "PipelineState", "synthetic_lm_batch",
+           "powerlaw_edges", "rmat_edges", "update_stream"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for LSMGraph's compute hot spots.
+
+Each kernel ships three artifacts (see EXAMPLE.md):
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling,
+  ops.py    — jit'd public wrapper (interpret=True on CPU),
+  ref.py    — pure-jnp oracle used by the allclose test sweeps.
+"""
+from .ops import (attention, batched_searchsorted, default_interpret,
+                  gather_segmin, gather_segsum, lex_searchsorted, merge_perm)
+
+__all__ = ["attention", "batched_searchsorted", "default_interpret",
+           "gather_segmin", "gather_segsum", "lex_searchsorted", "merge_perm"]

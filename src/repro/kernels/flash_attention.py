@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: blocked (flash) attention with GQA + causal masking.
+
+The serving-path compute hot spot for the LM framework that hosts LSMGraph
+(DESIGN.md §7).  Standard streaming-softmax formulation:
+
+  grid = (batch, q_heads, q_tiles); each program owns a (BQ, D) query tile in
+  VMEM and loops over (BK, D) key/value tiles of its kv-head (h_kv = h_q // G
+  resolved in the BlockSpec index maps), carrying running (max, denom, acc).
+
+Tiles are MXU-aligned (BQ = BK = 128, D padded to 128 multiples).  Validated
+in interpret mode against kernels/ref.py::mha_ref; the XLA path remains the
+dry-run default (see DESIGN.md §2.1 hardware-adaptation notes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BQ = 128
+BK = 128
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+            sq: int, skv: int):
+    qt = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (BQ, D)
+    d = q.shape[-1]
+    n_kv = skv // BK
+    offs = skv - sq  # causal offset: query i attends keys <= i + offs
+
+    def body(kt, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, 0, kt].astype(jnp.float32)        # (BK, D)
+        v = v_ref[0, 0, kt].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qi = qt * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+            ki = kt * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+            s = jnp.where(ki <= qi + offs, s, _NEG)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((BQ,), _NEG, jnp.float32)
+    l0 = jnp.zeros((BQ,), jnp.float32)
+    a0 = jnp.zeros((BQ, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, scale: float | None = None,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; Hq % Hkv == 0."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0 and sq % BQ == 0 and skv % BK == 0
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    kb = k.reshape(b, hkv, skv // BK, BK, d)
+    vb = v.reshape(b, hkv, skv // BK, BK, d)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=float(scale), causal=causal,
+                          sq=sq, skv=skv),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=(b, hq, sq // BQ),
+        in_specs=[
+            pl.BlockSpec((1, 1, BQ, d), lambda ib, ih, it: (ib, ih, it, 0)),
+            pl.BlockSpec((1, 1, skv // BK, BK, d),
+                         lambda ib, ih, it, g=g: (ib, ih // g, 0, 0, 0)),
+            pl.BlockSpec((1, 1, skv // BK, BK, d),
+                         lambda ib, ih, it, g=g: (ib, ih // g, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, BQ, d),
+                               lambda ib, ih, it: (ib, ih, it, 0)),
+        interpret=interpret,
+    )(q, kb, vb)
+    return out

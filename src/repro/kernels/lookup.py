@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: batched binary search over sorted run vertex keys.
+
+This is the *no-multi-level-index* read path (paper Fig 16's ablation
+baseline, RocksDB-style): every vertex query binary-searches each run's vkeys.
+The multi-level index replaces it with one O(1) gather — the kernel exists so
+the benchmark compares two real implementations on equal footing, and because
+batched lookup remains the hot probe for L0 runs (which have no per-vertex
+index entries, only first/min fid filters).
+
+Grid: query tiles of BQ; the sorted key vector lives in VMEM; each program
+runs a vectorized log2(N)-step bisection over its BQ queries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 256
+_I32MAX = jnp.iinfo(jnp.int32).max
+
+
+def _kernel(q_ref, keys_ref, nk_ref, out_ref):
+    q = q_ref[...]
+    keys = keys_ref[...]
+    nk = nk_ref[0]
+    n = keys.shape[0]
+    lo = jnp.zeros((BQ,), jnp.int32)
+    hi = jnp.broadcast_to(nk, (BQ,)).astype(jnp.int32)
+    steps = max(1, int(n).bit_length() + 1)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        kv = jnp.take(keys, jnp.clip(mid, 0, n - 1), axis=0)
+        go_right = kv < q
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    out_ref[0, :] = lo
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_searchsorted(keys: jnp.ndarray, queries: jnp.ndarray,
+                         n_keys, *, interpret: bool = False) -> jnp.ndarray:
+    """Left insertion points of queries into keys[:n_keys] (sorted int32)."""
+    nq = queries.shape[0]
+    n_tiles = max(1, (nq + BQ - 1) // BQ)
+    qpad = n_tiles * BQ
+    if qpad != nq:
+        queries = jnp.concatenate(
+            [queries, jnp.full((qpad - nq,), _I32MAX, jnp.int32)])
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, BQ), jnp.int32),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((BQ,), lambda i: (i,)),
+            pl.BlockSpec((keys.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ), lambda i: (i, 0)),
+        interpret=interpret,
+    )(queries.astype(jnp.int32), keys.astype(jnp.int32),
+      jnp.asarray(n_keys, jnp.int32)[None])
+    return out.reshape(-1)[:nq]

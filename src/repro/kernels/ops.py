@@ -1,0 +1,76 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel body
+runs as traced jnp on the host — bit-identical semantics to the TPU lowering
+contract); on a TPU backend they compile through Mosaic.  `PALLAS_INTERPRET`
+can force either mode.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .lookup import batched_searchsorted as _search
+from .merge import lex_searchsorted, merge_perm as _merge_perm
+from .segment_reduce import (gather_segmin as _gather_segmin,
+                             gather_segsum as _gather_segsum)
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def gather_segsum(dst, seg_id, wt, x, *, n_out: int,
+                  use_pallas: bool = True) -> jnp.ndarray:
+    """Fused message gather + CSR segment sum (analytics inner loop)."""
+    if not use_pallas:
+        return ref.gather_segsum_ref(dst, seg_id, wt, x, n_out)
+    return _gather_segsum(dst, seg_id, wt, x, n_out=n_out,
+                          interpret=default_interpret())
+
+
+def gather_segmin(dst, seg_id, wt, x, *, n_out: int,
+                  use_pallas: bool = True) -> jnp.ndarray:
+    """Segment-min relaxation (BFS / SSSP / CC inner loop)."""
+    if not use_pallas:
+        return ref.gather_segmin_ref(dst, seg_id, wt, x, n_out)
+    return _gather_segmin(dst, seg_id, wt, x, n_out=n_out,
+                          interpret=default_interpret())
+
+
+def merge_perm(a_keys, b_keys, na, nb, *, use_pallas: bool = True):
+    """Two-way sorted-merge permutation (compaction fast path)."""
+    if not use_pallas:
+        import numpy as np
+        return jnp.asarray(ref.merge_perm_ref(a_keys, b_keys, int(na),
+                                              int(nb)))
+    return _merge_perm(a_keys, b_keys, na, nb, interpret=default_interpret())
+
+
+def batched_searchsorted(keys, queries, n_keys, *, use_pallas: bool = True):
+    """Batched binary search (no-index ablation probe / L0 probes)."""
+    if not use_pallas:
+        return ref.searchsorted_ref(keys, queries, n_keys)
+    return _search(keys, queries, n_keys, interpret=default_interpret())
+
+
+def attention(q, k, v, *, causal: bool = True, scale=None,
+              use_pallas: bool = False):
+    """Blocked attention; XLA reference by default (dry-run path), Pallas
+    kernel opt-in (validated in interpret mode on CPU)."""
+    if not use_pallas:
+        return ref.mha_ref(q, k, v, causal=causal, scale=scale)
+    return _flash(q, k, v, causal=causal, scale=scale,
+                  interpret=default_interpret())
+
+
+__all__ = ["gather_segsum", "gather_segmin", "merge_perm",
+           "batched_searchsorted", "attention", "lex_searchsorted",
+           "default_interpret"]

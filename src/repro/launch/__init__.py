@@ -1,0 +1,1 @@
+"""Launch layer: meshes, shardings, dry-run, training/serving drivers."""

@@ -1,0 +1,421 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax-importing import: jax locks the device count on
+#   first init.  Only the dry-run sees 512 placeholder devices.
+
+"""Multi-pod dry-run: lower + compile EVERY (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (shardings
+compose, collectives legal, memory fits) and harvests the roofline terms:
+
+    with mesh:
+        lowered  = jax.jit(step).lower(*input_specs(arch, shape))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # fits?
+        print(compiled.cost_analysis())     # FLOPs/bytes -> §Roofline
+
+Results are appended incrementally to experiments/dryrun/<mesh>/<cell>.json
+so a long sweep is resumable.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, get_config, get_shape, shape_applicable
+from ..configs.base import ModelConfig, ShapeConfig, SHAPES
+from ..models import model as modellib
+from ..models.partition import shard_context
+from ..optim.adamw import AdamWState, adamw_init, adamw_update
+from ..optim.schedule import cosine_schedule
+from ..roofline.analysis import analyze_compiled
+from . import shardings as shl
+from .mesh import dp_axes, make_production_mesh, mesh_size
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# --------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input.
+# --------------------------------------------------------------------------
+
+def frontend_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.frontend == "vision":
+        return 256                      # ViT patch embeddings (stub)
+    if cfg.frontend == "audio":
+        return max(shape.seq_len // 2, 128)  # conv-downsampled frames (stub)
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract batch for a cell (weak-type-correct, no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        fl = frontend_len(cfg, shape)
+        if fl:
+            batch["frontend"] = jax.ShapeDtypeStruct((b, fl, cfg.d_model),
+                                                     jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        fl = frontend_len(cfg, shape)
+        if fl:
+            batch["frontend"] = jax.ShapeDtypeStruct((b, fl, cfg.d_model),
+                                                     jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# Step builders
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, n_micro: int = 1):
+    from ..optim.accumulation import accumulate_grads
+
+    def loss_fn(params, batch):
+        return modellib.loss(cfg, params, batch)
+
+    def train_step(params, opt: AdamWState, batch):
+        if n_micro > 1:
+            loss, grads = accumulate_grads(loss_fn, params, batch, n_micro)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = cosine_schedule(opt.step)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int):
+    def prefill_step(params, batch):
+        return modellib.prefill(cfg, params, batch, s_max=s_max)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return modellib.decode_step(cfg, params, cache, token, pos)
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# Scan-body cost correction.
+#
+# XLA's compiled.cost_analysis() counts a while/scan body ONCE regardless of
+# trip count (verified empirically — see EXPERIMENTS.md §Roofline).  Every
+# model here scans over layer periods, so we compile ONE period body at the
+# cell's exact shapes/shardings and add (n_periods - 1) x its cost.
+# --------------------------------------------------------------------------
+
+def _block_cost(fn, abs_args) -> Tuple[float, float]:
+    compiled = jax.jit(fn).lower(*abs_args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def probe_cell_correction(cfg: ModelConfig, mesh, shape: ShapeConfig
+                          ) -> Tuple[float, float]:
+    """Additive (flops, bytes) correction per device for scanned layers."""
+    prefix, period, n_periods = modellib.plan_layers(cfg)
+    d = cfg.d_model
+    b = shape.global_batch
+    s_eff = shape.seq_len
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        s_eff += frontend_len(cfg, shape)
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def sharded(shape_, dtype=jnp.bfloat16):
+        ax = dp if shape_[0] % _axsize_total(mesh, dp) == 0 else None
+        spec = P(*((ax,) + (None,) * (len(shape_) - 1)))
+        return jax.ShapeDtypeStruct(shape_, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    blocks_abs = {"prefix": [
+        jax.eval_shape(lambda k, ld=ld: modellib._init_block(k, cfg, ld),
+                       jax.random.key(0)) for ld in period]}
+    bspecs = shl.param_pspecs(cfg, mesh, blocks_abs)
+    blocks_in = shl.with_sharding(mesh, blocks_abs, bspecs)
+    flops = byt = 0.0
+    with mesh, shard_context(mesh):
+        if shape.kind in ("train", "prefill"):
+            x_abs = sharded((b, s_eff, d))
+
+            def fwd(x, blocks):
+                aux = jnp.zeros((), jnp.float32)
+                for j, ld in enumerate(period):
+                    def one(p_, x_, aux_, ld=ld):
+                        return modellib._block_train(cfg, ld, p_, x_, aux_)
+                    if cfg.remat and len(period) > 1:
+                        one = jax.checkpoint(one)  # mirror the model's remat
+                    x, aux = one(blocks["prefix"][j], x, aux)
+                return jnp.sum(x.astype(jnp.float32)) + aux
+
+            if shape.kind == "train":
+                fn = jax.grad(jax.checkpoint(fwd) if cfg.remat else fwd,
+                              argnums=(0, 1))
+            else:
+                fn = fwd
+            flops, byt = _block_cost(fn, (x_abs, blocks_in))
+            if cfg.family == "encdec" and cfg.enc_layers > 1:
+                enc_ld = modellib.LayerDef("attn", "mlp")
+                eb_abs = {"prefix": [jax.eval_shape(
+                    lambda k: modellib._init_block(k, cfg, enc_ld),
+                    jax.random.key(0))]}
+                eb_in = shl.with_sharding(
+                    mesh, eb_abs, shl.param_pspecs(cfg, mesh, eb_abs))
+                xe_abs = sharded((b, frontend_len(cfg, shape), d))
+
+                def enc_fwd(x, blocks):
+                    p = blocks["prefix"][0]
+                    h = modellib._norm(cfg, p["norm1"], x)
+                    x = x + modellib.L.gqa_train(p["attn"], h, cfg,
+                                                 causal=False)
+                    x = x + modellib.L.mlp(
+                        p["mlp"], modellib._norm(cfg, p["norm2"], x))
+                    return jnp.sum(x.astype(jnp.float32))
+
+                efn = (jax.grad(enc_fwd, argnums=(0, 1))
+                       if shape.kind == "train" else enc_fwd)
+                ef, eb_ = _block_cost(efn, (xe_abs, eb_in))
+                mlt = max(n_periods - 1, 1)
+                flops += ef * (cfg.enc_layers - 1) / mlt
+                byt += eb_ * (cfg.enc_layers - 1) / mlt
+        else:  # decode
+            x_abs = sharded((b, 1, d))
+            cache_abs = {"period": [jax.eval_shape(
+                lambda ld=ld: modellib._init_layer_cache(cfg, ld, b,
+                                                         shape.seq_len))
+                for ld in period]}
+            cspecs = shl.cache_pspecs(cfg, mesh, cache_abs)
+            cache_in = shl.with_sharding(mesh, cache_abs, cspecs)
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def dec(x, blocks, caches, pos):
+                outs = []
+                for j, ld in enumerate(period):
+                    x, c = modellib._block_decode(
+                        cfg, ld, blocks["prefix"][j], x,
+                        caches["period"][j], pos)
+                    outs.append(c)
+                return x, outs
+
+            flops, byt = _block_cost(dec, (x_abs, blocks_in, cache_in,
+                                           pos_abs))
+    mult = max(n_periods - 1, 0)
+    return flops * mult, byt * mult
+
+
+def _axsize_total(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+# --------------------------------------------------------------------------
+# Cell lowering
+# --------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               donate: bool = True, n_micro: int = 1, cfg_override=None):
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, why
+
+    params_abs = modellib.param_shapes(cfg)
+    pspecs = shl.param_pspecs(cfg, mesh, params_abs)
+    params_in = shl.with_sharding(mesh, params_abs, pspecs)
+    batch_abs = input_specs(cfg, shape)
+
+    with mesh, shard_context(mesh):
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            ospecs = AdamWState(step=P(), m=pspecs, v=pspecs)
+            opt_in = shl.with_sharding(mesh, opt_abs, ospecs)
+            bspecs = shl.batch_pspecs(cfg, mesh, batch_abs)
+            batch_in = shl.with_sharding(mesh, batch_abs, bspecs)
+            step = make_train_step(cfg, n_micro=n_micro)
+            lowered = jax.jit(
+                step, donate_argnums=(0, 1) if donate else ()).lower(
+                params_in, opt_in, batch_in)
+        elif shape.kind == "prefill":
+            bspecs = shl.batch_pspecs(cfg, mesh, batch_abs)
+            batch_in = shl.with_sharding(mesh, batch_abs, bspecs)
+            s_max = shape.seq_len
+            if cfg.frontend == "vision":  # prefix rides in the same cache
+                s_max += frontend_len(cfg, shape)
+            step = make_prefill_step(cfg, s_max=s_max)
+            # Shard the OUTPUT cache explicitly: without out_shardings XLA
+            # materializes the (L,B,S,·) caches unsharded per device — the
+            # invariant ~150 GB/dev peak of hillclimb A (§Perf iteration A4).
+            out_abs = jax.eval_shape(step, params_abs, batch_abs)
+            lg_spec = shl.batch_pspecs(cfg, mesh, out_abs[0])
+            c_spec = shl.cache_pspecs(cfg, mesh, out_abs[1])
+            out_sh = (
+                NamedSharding(mesh, lg_spec),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), c_spec),
+            )
+            lowered = jax.jit(step, out_shardings=out_sh).lower(
+                params_in, batch_in)
+        else:  # decode
+            enc_len = (frontend_len(cfg, shape)
+                       if cfg.family == "encdec" else 0)
+            cache_abs = jax.eval_shape(
+                lambda: modellib.init_cache(cfg, shape.global_batch,
+                                            shape.seq_len,
+                                            enc_len=max(enc_len, 1)
+                                            if cfg.family == "encdec" else 0))
+            cspecs = shl.cache_pspecs(cfg, mesh, cache_abs)
+            cache_in = shl.with_sharding(mesh, cache_abs, cspecs)
+            tok_in = jax.ShapeDtypeStruct(
+                (shape.global_batch,), jnp.int32,
+                sharding=NamedSharding(mesh, shl.batch_pspecs(
+                    cfg, mesh,
+                    jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32))))
+            pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+            step = make_serve_step(cfg)
+            lowered = jax.jit(
+                step, donate_argnums=(1,) if donate else ()).lower(
+                params_in, cache_in, tok_in, pos_in)
+    return lowered, None
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = OUT_DIR) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    chips = mesh_size(mesh)
+    t0 = time.time()
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "chips": chips}
+    try:
+        lowered, skip = lower_cell(arch, shape_name, mesh, mesh_name)
+        if lowered is None:
+            rec["status"] = "skipped"
+            rec["reason"] = skip
+            _write(rec, out_dir)
+            return rec
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        try:
+            corr_f, corr_b = probe_cell_correction(
+                get_config(arch), mesh, get_shape(shape_name))
+        except Exception as pe:  # correction probe is best-effort
+            corr_f, corr_b = 0.0, 0.0
+            rec["probe_error"] = f"{type(pe).__name__}: {pe}"
+        report = analyze_compiled(
+            compiled, hlo, arch=arch, shape_cfg=get_shape(shape_name),
+            cfg=get_config(arch), mesh_name=mesh_name, chips=chips,
+            flops_correction=corr_f, bytes_correction=corr_b)
+        rec.update(report.to_json())
+        rec["scan_correction_flops"] = corr_f
+        rec["scan_correction_bytes"] = corr_b
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")}
+        if get_shape(shape_name).kind == "train":
+            # Production fit check: gradient accumulation (micro=4) divides
+            # activation peaks while preserving the global batch; roofline
+            # terms above stay on the n_micro=1 lowering (exact accounting).
+            try:
+                lowered4, _ = lower_cell(arch, shape_name, mesh, mesh_name,
+                                         n_micro=4)
+                ma4 = lowered4.compile().memory_analysis()
+                rec["peak_memory_per_device_micro4"] = float(
+                    ma4.temp_size_in_bytes + ma4.argument_size_in_bytes)
+            except Exception as pe:
+                rec["micro4_error"] = f"{type(pe).__name__}: {pe}"
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"(compile {t_compile:.0f}s, bottleneck={rec['bottleneck']}, "
+              f"peak/dev={rec['peak_memory_per_device']/1e9:.2f} GB"
+              + (f", micro4={rec['peak_memory_per_device_micro4']/1e9:.2f} GB"
+                 if "peak_memory_per_device_micro4" in rec else "") + ")",
+              flush=True)
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAILED {e}",
+              flush=True)
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: Dict[str, Any], out_dir: str) -> None:
+    d = os.path.join(out_dir, rec["mesh"])
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{rec['arch']}__{rec['shape']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    meshes = (["single", "multipod"] if args.mesh == "both"
+              else [args.mesh])
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = ([s.name for s in SHAPES] if (args.all or args.shape is None)
+              else [args.shape])
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                if args.skip_done:
+                    p = os.path.join(OUT_DIR, mesh_name,
+                                     f"{arch}__{shape_name}.json")
+                    if os.path.exists(p):
+                        with open(p) as f:
+                            if json.load(f).get("status") in ("ok",
+                                                              "skipped"):
+                                continue
+                run_cell(arch, shape_name, mesh_name)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Sharding policy: FSDP(ZeRO-3) over (pod, data) x tensor/expert parallel
+over `model`, for every assigned architecture.
+
+Rules are keyed on parameter-tree paths; every rule degrades gracefully to
+replication when a dimension is not divisible by the mesh axis (e.g. the odd
+92553 InternVL vocab keeps its vocab dim replicated but shards d_model).
+
+Activation/cache policy (DESIGN.md §6):
+  * batch over the DP bundle when divisible;
+  * KV-cache sequence over `model` (few-KV-head GQA archs can't shard heads
+    by 16 — sharding S instead makes XLA emit the flash-decoding style
+    partial-softmax + combine);
+  * SSM state heads over `model`.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .mesh import dp_axes
+
+
+def _axsize(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def _fit(mesh: Mesh, spec: Tuple, shape: Tuple[int, ...]) -> P:
+    """Drop axes that don't divide their dim (replicate instead)."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        out.append(ax if (ax is not None and dim % _axsize(mesh, ax) == 0)
+                   else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, params_abs) -> Any:
+    """PartitionSpec tree matching the (abstract) param tree."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def rule(pathstr: str, ndim: int, shape) -> P:
+        base = None
+        if pathstr.endswith("embed"):
+            base = ("model", dp)
+        elif pathstr.endswith("head"):
+            base = (dp, "model")
+        elif "/moe/" in pathstr or pathstr.endswith("router/w"):
+            if pathstr.endswith("router/w"):
+                base = (dp, None)
+            elif pathstr.endswith("wg") or pathstr.endswith("wu"):
+                base = ("model", dp, None)      # (E, d, ff) — EP over model
+            elif pathstr.endswith("wd"):
+                base = ("model", None, dp)
+            elif "/shared/" in pathstr or "/dense/" in pathstr:
+                base = _mlp_rule(pathstr, dp)
+        elif "/mlp/" in pathstr:
+            base = _mlp_rule(pathstr, dp)
+        elif "/ssm/" in pathstr:
+            if "in_proj" in pathstr:
+                base = (dp, "model")
+            elif "out_proj" in pathstr:
+                base = ("model", dp)
+            elif "conv_w" in pathstr:
+                base = (None, "model")
+            elif ("conv_b" in pathstr or "norm_scale" in pathstr):
+                base = ("model",)
+            else:                                # A_log, D, dt_bias
+                base = ("model",)
+        elif "/attn/" in pathstr or "/cross/" in pathstr:
+            if pathstr.endswith("wo/w"):
+                base = ("model", dp)
+            elif pathstr.endswith("/b"):
+                base = ("model",)
+            elif "norm" in pathstr:
+                base = (None,)
+            else:                                # wq/wk/wv/wdq/wuq/wdkv/...
+                base = (dp, "model")
+        if base is None:
+            base = (None,) * ndim
+        # Stacked (scan) leaves carry a leading period/layer dim.
+        if len(base) < ndim:
+            base = (None,) * (ndim - len(base)) + tuple(base)
+        base = tuple(base[:ndim])
+        return _fit(mesh, base, shape)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_abs)
+    specs = [rule(_path_str(p), len(leaf.shape), leaf.shape)
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _mlp_rule(pathstr: str, dp):
+    if pathstr.endswith("wd/w"):
+        return ("model", dp)
+    if pathstr.endswith("/b"):
+        return ("model",)
+    return (dp, "model")
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, batch_abs) -> Any:
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def rule(path, leaf):
+        spec = (dp,) + (None,) * (len(leaf.shape) - 1)
+        return _fit(mesh, spec, leaf.shape)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_abs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_abs) -> Any:
+    """KV caches: (scan, B, S, Hkv, hd) -> (None, dp, 'model', None, None);
+    MLA latents: (scan, B, S, lat) -> (None, dp, 'model', None);
+    SSM states h: (scan, B, H, N, P) -> (None, dp, 'model', None, None)."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        stacked = "period" in ps or "cross" in ps
+        lead = (None,) if stacked else ()
+        if ps.endswith("h"):                      # SSM state
+            spec = lead + (dp, "model") + (None,) * (nd - len(lead) - 2)
+        elif ps.endswith("conv"):
+            spec = lead + (dp,) + (None,) * (nd - len(lead) - 1)
+        else:                                     # k/v/ckv/kr caches
+            spec = lead + (dp, "model") + (None,) * (nd - len(lead) - 2)
+        return _fit(mesh, tuple(spec[:nd]), leaf.shape)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
+
+
+def with_sharding(mesh: Mesh, abs_tree, spec_tree):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=NamedSharding(mesh, s)),
+        abs_tree, spec_tree)

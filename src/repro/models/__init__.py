@@ -1,0 +1,7 @@
+"""LM zoo for the assigned architectures (DESIGN.md §7)."""
+from . import layers, moe, ssm
+from .model import (decode_step, init_cache, init_params, loss, param_shapes,
+                    plan_layers, prefill)
+
+__all__ = ["layers", "moe", "ssm", "decode_step", "init_cache", "init_params",
+           "loss", "param_shapes", "plan_layers", "prefill"]

@@ -1,0 +1,439 @@
+"""Core neural layers: norms, RoPE, GQA/SWA/MLA attention, SwiGLU MLP.
+
+Hand-rolled param dicts (init_* -> pytree, apply functions pure) — no flax
+dependency.  Everything is GSPMD-friendly: big einsums with stable dimension
+orders so in_shardings on params + inputs propagate cleanly.
+
+Attention provides two softmax paths:
+  * full     — one (S, S) einsum; fine to S ~ 8k under remat;
+  * chunked  — lax.scan over KV chunks with running (m, l, acc): the XLA
+    equivalent of kernels/flash_attention.py, used for 32k/500k shapes so the
+    dry-run's memory_analysis reflects a production attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import MLAConfig, ModelConfig
+from .partition import constrain, constrain_scores
+
+Params = Dict[str, Any]
+_CHUNK = 2048
+_NEG = -1e30
+
+
+# ----------------------------------------------------------------- basics --
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.bfloat16) -> Params:
+    w = jax.random.normal(key, (d_in, d_out), dtype) * (d_in ** -0.5)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * p["scale"]
+
+
+def init_layernorm(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+# ------------------------------------------------------------------- rope --
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; pos: int32 [S] (or scalar for decode)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    ang = pos[..., None].astype(jnp.float32) * freqs      # [S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                      # [S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention --
+_PAD_POS = 1 << 30  # sentinel key position: always masked
+
+
+def _mask_bias(qpos, kpos, *, causal: bool, window: int) -> jnp.ndarray:
+    ok = kpos[None, :] <= qpos[:, None] if causal else jnp.ones(
+        (qpos.shape[0], kpos.shape[0]), bool)
+    ok = ok & (kpos[None, :] < _PAD_POS)
+    if window:
+        ok = ok & (kpos[None, :] > qpos[:, None] - window)
+    return jnp.where(ok, 0.0, _NEG)
+
+
+def full_attention(q, k, v, qpos, kpos, *, causal: bool, window: int,
+                   scale: float) -> jnp.ndarray:
+    """q: [B,S,Hq,hd]; k/v: [B,Skv,Hkv,hd]."""
+    hq, hkv = q.shape[2], k.shape[2]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    # Scores sharded (batch x heads-or-qlen): the peak-memory hot spot.
+    logits = constrain_scores(logits)
+    logits = logits + _mask_bias(qpos, kpos, causal=causal, window=window)
+    p = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def chunked_attention(q, k, v, qpos, kpos, *, causal: bool, window: int,
+                      scale: float) -> jnp.ndarray:
+    """Streaming-softmax attention, O(S·chunk) memory (flash-in-XLA)."""
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]  # may differ from hd (MLA)
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    pad = (-skv) % _CHUNK
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.concatenate(
+            [kpos, jnp.full((pad,), _PAD_POS, kpos.dtype)])
+        skv += pad
+    ck = _CHUNK
+    nck = skv // ck
+    kc = k.reshape(b, nck, ck, hq, hd)
+    vc = v.reshape(b, nck, ck, hq, hdv)
+    kposc = kpos.reshape(nck, ck)
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kt, vt, kp = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kt.astype(jnp.float32))
+        s = constrain_scores(s)
+        s = s + _mask_bias(qpos, kp, causal=causal, window=window)[None, None]
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, -1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vt.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    a0 = jnp.zeros((b, hq, sq, hdv), jnp.float32)
+    if nck <= 16:
+        # Unrolled: keeps compiled flop/byte accounting exact (lax.scan
+        # bodies are counted once by cost_analysis) at tolerable HLO growth.
+        carry = (m0, l0, a0)
+        for t in range(nck):
+            carry, _ = body(carry, (kc[:, t], vc[:, t], kposc[t]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kposc))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def attention_any(q, k, v, qpos, kpos, *, causal: bool, window: int,
+                  scale: float) -> jnp.ndarray:
+    if k.shape[1] > 8192:
+        return chunked_attention(q, k, v, qpos, kpos, causal=causal,
+                                 window=window, scale=scale)
+    return full_attention(q, k, v, qpos, kpos, causal=causal, window=window,
+                          scale=scale)
+
+
+# ------------------------------------------------------------- GQA block ---
+def init_gqa(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias,
+                          dtype=dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias,
+                          dtype=dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias,
+                          dtype=dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, dtype=dtype),
+    }
+
+
+def gqa_train(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              causal: bool = True, return_kv: bool = False):
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = linear(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    o = attention_any(q, k, v, pos, pos, causal=causal,
+                      window=cfg.swa_window if causal else 0,
+                      scale=hd ** -0.5)
+    y = linear(p["wo"], o.reshape(b, s, cfg.n_heads * hd))
+    if return_kv:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def cross_attention(p: Params, x: jnp.ndarray, kv: Dict[str, jnp.ndarray],
+                    cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder cross-attention over precomputed encoder k/v (no mask)."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = linear(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    qpos = jnp.arange(s, dtype=jnp.int32)
+    kpos = jnp.arange(kv["k"].shape[1], dtype=jnp.int32)
+    o = attention_any(q, kv["k"], kv["v"], qpos, kpos, causal=False,
+                      window=0, scale=hd ** -0.5)
+    return linear(p["wo"], o.reshape(b, s, cfg.n_heads * hd))
+
+
+def cross_kv(p: Params, memory: jnp.ndarray, cfg: ModelConfig) -> Dict:
+    b, sm, _ = memory.shape
+    hd = cfg.hd
+    k = linear(p["wk"], memory).reshape(b, sm, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], memory).reshape(b, sm, cfg.n_kv_heads, hd)
+    if cfg.n_kv_heads != cfg.n_heads:
+        k = jnp.repeat(k, cfg.n_heads // cfg.n_kv_heads, axis=2)
+        v = jnp.repeat(v, cfg.n_heads // cfg.n_kv_heads, axis=2)
+    return {"k": k, "v": v}
+
+
+def gqa_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               pos: jnp.ndarray, cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode. cache: {k: [B,W,Hkv,hd], v: ...}; W = full S_max or
+    the SWA window (ring buffer)."""
+    b, s, d = x.shape
+    assert s == 1
+    hd = cfg.hd
+    w = cache["k"].shape[1]
+    q = linear(p["wq"], x).reshape(b, 1, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k = apply_rope(k, pos[None], cfg.rope_theta)
+    slot = pos % w  # ring buffer (== pos when W covers the full context)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    # Absolute position of each slot given the current write head.
+    sidx = jnp.arange(w, dtype=jnp.int32)
+    abs_pos = pos - ((pos - sidx) % w)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if cfg.swa_window:
+        valid = valid & (abs_pos > pos - cfg.swa_window)
+    kq = jnp.repeat(ck, cfg.n_heads // cfg.n_kv_heads, axis=2)
+    vq = jnp.repeat(cv, cfg.n_heads // cfg.n_kv_heads, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kq) * (hd ** -0.5)
+    logits = jnp.where(valid[None, None, None, :], logits, _NEG)
+    pr = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr, vq)
+    y = linear(p["wo"], o.reshape(b, 1, cfg.n_heads * hd))
+    return y, {"k": ck, "v": cv}
+
+
+def mla_latent_chunked_attention(qcat, ckv, kr, wuk, wuv, *, scale: float,
+                                 h: int, qk_nope: int, v_dim: int):
+    """Streaming MLA attention expanding K/V from the latent PER CHUNK
+    (FlashMLA-style; §Perf hillclimb A).  Never materializes the full
+    (B,S,H,qk_nope) keys / (B,S,H,v_dim) values — per-chunk transients only.
+
+    qcat: [B,S,H,qk_nope+rope]; ckv: [B,S,kv_lora]; kr: [B,S,rope];
+    wuk: [kv_lora, H, qk_nope]; wuv: [kv_lora, H, v_dim].
+    """
+    b, s, _, dq = qcat.shape
+    pad = (-s) % _CHUNK
+    if pad:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        kr = jnp.pad(kr, ((0, 0), (0, pad), (0, 0)))
+    skv = s + pad
+    nck = skv // _CHUNK
+    qpos = jnp.arange(s, dtype=jnp.int32)
+    qf = qcat.astype(jnp.float32) * scale
+
+    def body(carry, kt):
+        m, l, acc = carry
+        ckv_t = jax.lax.dynamic_slice_in_dim(
+            ckv, kt * _CHUNK, _CHUNK, axis=1).astype(jnp.float32)
+        kr_t = jax.lax.dynamic_slice_in_dim(
+            kr, kt * _CHUNK, _CHUNK, axis=1).astype(jnp.float32)
+        kn_t = jnp.einsum("bkc,chn->bkhn", ckv_t, wuk.astype(jnp.float32))
+        kcat_t = jnp.concatenate(
+            [kn_t, jnp.broadcast_to(kr_t[:, :, None, :],
+                                    (b, _CHUNK, h, kr.shape[-1]))], -1)
+        v_t = jnp.einsum("bkc,chv->bkhv", ckv_t, wuv.astype(jnp.float32))
+        kpos_t = kt * _CHUNK + jnp.arange(_CHUNK, dtype=jnp.int32)
+        kpos_t = jnp.where(kpos_t < s, kpos_t, _PAD_POS)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", qf, kcat_t)
+        sc = constrain_scores(sc)
+        sc = sc + _mask_bias(qpos, kpos_t, causal=True, window=0)[None, None]
+        m_new = jnp.maximum(m, jnp.max(sc, -1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, -1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd",
+                                                      p, v_t)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, v_dim), jnp.float32)
+    # ALWAYS scan here (§Perf A6): unrolling keeps every (B,H,S,chunk) fp32
+    # score tensor live simultaneously — for 128 MLA heads that was the
+    # ~150 GB/dev prefill peak.  (Flop accounting: the inner scan body is
+    # counted once by cost_analysis; noted in §Roofline methodology.)
+    carry, _ = jax.lax.scan(body, (m0, l0, a0),
+                            jnp.arange(nck, dtype=jnp.int32))
+    m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(qcat.dtype)
+
+
+# ------------------------------------------------------------- MLA block ---
+def init_mla(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": init_linear(ks[0], d, m.q_lora, dtype=dtype),
+        "q_norm": init_rmsnorm(m.q_lora, dtype),
+        "wuq": init_linear(ks[1], m.q_lora, h * (m.qk_nope + m.qk_rope),
+                           dtype=dtype),
+        "wdkv": init_linear(ks[2], d, m.kv_lora + m.qk_rope, dtype=dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora, dtype),
+        "wuk": init_linear(ks[3], m.kv_lora, h * m.qk_nope, dtype=dtype),
+        "wuv": init_linear(ks[4], m.kv_lora, h * m.v_dim, dtype=dtype),
+        "wo": init_linear(ks[5], h * m.v_dim, d, dtype=dtype),
+    }
+
+
+def mla_train(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q = linear(p["wuq"], rmsnorm(p["q_norm"], linear(p["wdq"], x)))
+    # 128-head MLA query/key/value activations are the prefill peak-memory
+    # hot spot — keep heads sharded over the model axis (§Perf A2).
+    q = constrain(q.reshape(b, s, h, m.qk_nope + m.qk_rope),
+                  "dp", None, "model", None)
+    qn, qr = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    ckv_full = linear(p["wdkv"], x)
+    ckv = rmsnorm(p["kv_norm"], ckv_full[..., :m.kv_lora])
+    kr = ckv_full[..., m.kv_lora:].reshape(b, s, 1, m.qk_rope)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    qr = apply_rope(qr, pos, cfg.rope_theta)
+    kr = apply_rope(kr, pos, cfg.rope_theta)
+    scale = (m.qk_nope + m.qk_rope) ** -0.5
+    qcat = jnp.concatenate([qn, qr], -1)
+    if cfg.mla_absorbed_prefill and s > 4096:
+        # Hillclimb A: expand K/V from the latent chunk-by-chunk — the full
+        # (B,S,H,·) key/value tensors never exist.
+        wuk = p["wuk"]["w"].reshape(m.kv_lora, h, m.qk_nope)
+        wuv = p["wuv"]["w"].reshape(m.kv_lora, h, m.v_dim)
+        o = mla_latent_chunked_attention(
+            qcat, ckv, kr[:, :, 0, :], wuk, wuv, scale=scale, h=h,
+            qk_nope=m.qk_nope, v_dim=m.v_dim)
+        return linear(p["wo"], o.reshape(b, s, h * m.v_dim))
+    kn = constrain(linear(p["wuk"], ckv).reshape(b, s, h, m.qk_nope),
+                   "dp", None, "model", None)
+    v = constrain(linear(p["wuv"], ckv).reshape(b, s, h, m.v_dim),
+                  "dp", None, "model", None)
+    kcat = jnp.concatenate([kn, jnp.broadcast_to(kr, (b, s, h, m.qk_rope))],
+                           -1)
+    # v_dim may differ from qk dims; attention_any handles hd mismatch by
+    # operating on (q,k) for logits and v for values.
+    o = attention_any(qcat, kcat, v, pos, pos, causal=True, window=0,
+                      scale=scale)
+    return linear(p["wo"], o.reshape(b, s, h * m.v_dim))
+
+
+def mla_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               pos: jnp.ndarray, cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed-matrix MLA decode: the cache holds ONLY the compressed latent
+    (kv_lora) + rotary key (qk_rope) per token — 576 dims for DeepSeek-V2.
+
+    q_eff = q_nope @ W_uk  lives in latent space, so attention scores and the
+    output contraction run against the latent cache directly; W_uv is applied
+    once to the attention-weighted latent (the paper's weight-absorption
+    trick, here the decode-memory headline of MLA).
+    """
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    w = cache["ckv"].shape[1]
+    q = linear(p["wuq"], rmsnorm(p["q_norm"], linear(p["wdq"], x)))
+    q = q.reshape(b, 1, h, m.qk_nope + m.qk_rope)
+    qn, qr = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    qr = apply_rope(qr, pos[None], cfg.rope_theta)
+    ckv_full = linear(p["wdkv"], x)
+    ckv_t = rmsnorm(p["kv_norm"], ckv_full[..., :m.kv_lora])
+    kr_t = apply_rope(ckv_full[..., m.kv_lora:].reshape(b, 1, 1, m.qk_rope),
+                      pos[None], cfg.rope_theta)
+    cache_ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), (0, pos, 0))
+    cache_kr = jax.lax.dynamic_update_slice(
+        cache["kr"], kr_t[:, :, 0, :].astype(cache["kr"].dtype), (0, pos, 0))
+    # Absorb W_uk into the query: q_eff [B,H,kv_lora].
+    wuk = p["wuk"]["w"].reshape(m.kv_lora, h, m.qk_nope)
+    q_eff = jnp.einsum("bhn,khn->bhk", qn[:, 0], wuk)
+    s_lat = jnp.einsum("bhk,bsk->bhs", q_eff, cache_ckv)
+    s_rope = jnp.einsum("bhr,bsr->bhs", qr[:, 0], cache_kr)
+    scale = (m.qk_nope + m.qk_rope) ** -0.5
+    logits = (s_lat + s_rope) * scale
+    sidx = jnp.arange(w, dtype=jnp.int32)
+    logits = jnp.where((sidx <= pos)[None, None, :], logits, _NEG)
+    pr = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+    o_lat = jnp.einsum("bhs,bsk->bhk", pr, cache_ckv)
+    wuv = p["wuv"]["w"].reshape(m.kv_lora, h, m.v_dim)
+    o = jnp.einsum("bhk,khv->bhv", o_lat, wuv)
+    y = linear(p["wo"], o.reshape(b, 1, h * m.v_dim))
+    return y, {"ckv": cache_ckv, "kr": cache_kr}
+
+
+# ------------------------------------------------------------------- MLP ---
+def init_mlp(key, d: int, ff: int, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"wg": init_linear(ks[0], d, ff, dtype=dtype),
+            "wu": init_linear(ks[1], d, ff, dtype=dtype),
+            "wd": init_linear(ks[2], ff, d, dtype=dtype)}
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["wd"], jax.nn.silu(linear(p["wg"], x)) * linear(p["wu"], x))

@@ -1,0 +1,496 @@
+"""Model assembly: every assigned architecture from one layer plan.
+
+A config compiles to a LAYER PLAN — `prefix` (unrolled leading layers, e.g.
+DeepSeek-V2's dense first layer) + a `period` of layer definitions scanned
+`n_periods` times (uniform archs: period length 1; Jamba: the 8-layer
+Mamba/attention interleave).  Period params are stacked with leading dim
+n_periods so the whole depth lowers as ONE lax.scan — compile time is
+independent of layer count, which is what makes the 40-cell x 512-device
+dry-run tractable.
+
+Public surface (built by `build(cfg)`):
+  init_params(key)                  -> params pytree
+  loss(params, batch)               -> scalar CE (+ MoE aux)
+  prefill(params, batch)            -> (last-token logits, cache)
+  decode_step(params, cache, token, pos) -> (logits, cache)
+  init_cache(b, s_max)              -> cache pytree
+`batch` = {"tokens": (B,S) int32 [, "frontend": (B,Sf,d), "targets": ...]}.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import moe as M
+from . import partition
+from . import ssm as S
+
+Params = Dict[str, Any]
+
+
+class LayerDef(NamedTuple):
+    mixer: str   # attn | mla | ssm
+    ffn: str     # mlp | moe | none
+
+
+def plan_layers(cfg: ModelConfig) -> Tuple[List[LayerDef], List[LayerDef], int]:
+    """-> (prefix_defs, period_defs, n_periods)."""
+    defs: List[LayerDef] = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            mixer, ffn = "ssm", "none"
+        elif cfg.family == "hybrid":
+            mixer = "attn" if i % cfg.attn_period == cfg.attn_offset else "ssm"
+            ffn = "moe" if cfg._is_moe_layer(i) else "mlp"
+        else:
+            mixer = "mla" if cfg.mla is not None else "attn"
+            ffn = "moe" if cfg._is_moe_layer(i) else "mlp"
+        defs.append(LayerDef(mixer, ffn))
+    n_prefix = cfg.moe.first_dense if cfg.moe else 0
+    prefix, rest = defs[:n_prefix], defs[n_prefix:]
+    # Find the shortest period that tiles `rest`.
+    for plen in range(1, len(rest) + 1):
+        if len(rest) % plen == 0 and rest == rest[:plen] * (len(rest) // plen):
+            return prefix, rest[:plen], len(rest) // plen
+    return prefix, rest, 1
+
+
+# --------------------------------------------------------------------------
+# Parameter construction
+# --------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, ldef: LayerDef,
+                dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    norm = (L.init_layernorm if cfg.family == "encdec"
+            else L.init_rmsnorm)
+    p: Params = {"norm1": norm(cfg.d_model, dtype),
+                 "norm2": norm(cfg.d_model, dtype)}
+    if ldef.mixer == "attn":
+        p["attn"] = L.init_gqa(ks[0], cfg, dtype)
+    elif ldef.mixer == "mla":
+        p["attn"] = L.init_mla(ks[0], cfg, dtype)
+    else:
+        p["ssm"] = S.init_ssm(ks[0], cfg, dtype)
+    if ldef.ffn == "mlp":
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif ldef.ffn == "moe":
+        p["moe"] = M.init_moe(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Params:
+    prefix, period, n_periods = plan_layers(cfg)
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab
+    norm = L.init_layernorm if cfg.family == "encdec" else L.init_rmsnorm
+    vp = cfg.padded_vocab()
+    p: Params = {
+        "embed": jax.random.normal(keys[0], (vp, d), dtype) * 0.02,
+        "final_norm": norm(d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(keys[1], (d, vp), dtype) * (d ** -0.5)
+    p["prefix"] = [
+        _init_block(k, cfg, ld, dtype)
+        for k, ld in zip(jax.random.split(keys[2], max(len(prefix), 1)),
+                         prefix)]
+    stacked = []
+    for j, ld in enumerate(period):
+        sub = [_init_block(k, cfg, ld, dtype)
+               for k in jax.random.split(jax.random.fold_in(keys[3], j),
+                                         n_periods)]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *sub))
+    p["period"] = stacked
+    if cfg.family == "encdec":
+        enc_blocks = [
+            _init_block(k, cfg, LayerDef("attn", "mlp"), dtype)
+            for k in jax.random.split(keys[4], cfg.enc_layers)]
+        p["enc"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks)
+        p["enc_norm"] = norm(d, dtype)
+        xb = [L.init_gqa(k, cfg, dtype)
+              for k in jax.random.split(keys[5], cfg.n_layers)]
+        p["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *xb)
+        p["cross_norm"] = [norm(d, dtype) for _ in range(1)][0]
+    return p
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Abstract param pytree (ShapeDtypeStruct) — no allocation (dry-run)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def _norm(cfg: ModelConfig, p, x):
+    if cfg.family == "encdec":
+        return L.layernorm(p, x, cfg.norm_eps)
+    return L.rmsnorm(p, x, cfg.norm_eps)
+
+
+def _block_train(cfg: ModelConfig, ldef: LayerDef, p: Params, x, aux,
+                 cross_p=None, memory=None):
+    # Megatron-SP layout: block-boundary activations are SEQUENCE-sharded
+    # over the model axis (norms/FFN run fully sharded; only attention
+    # gathers K/V — small under GQA).  Cuts the remat-saved scan carries by
+    # the TP degree (perf iteration #5, EXPERIMENTS.md §Perf).
+    x = partition.constrain(x, "dp", "model", None)
+    h = _norm(cfg, p["norm1"], x)
+    if ldef.mixer == "attn":
+        x = x + L.gqa_train(p["attn"], h, cfg)
+    elif ldef.mixer == "mla":
+        x = x + L.mla_train(p["attn"], h, cfg)
+    else:
+        x = x + S.ssd_train(p["ssm"], h, cfg)
+    if cross_p is not None:
+        kv = L.cross_kv(cross_p, memory, cfg)
+        x = x + L.cross_attention(cross_p, _norm(cfg, p["norm2"], x), kv, cfg)
+    h2 = _norm(cfg, p["norm2"], x)
+    if ldef.ffn == "mlp":
+        x = x + L.mlp(p["mlp"], h2)
+    elif ldef.ffn == "moe":
+        x = x + M.moe_apply(p["moe"], h2, cfg)
+        aux = aux + M.aux_load_balance_loss(p["moe"], h2, cfg)
+    return x, aux
+
+
+def _backbone_train(cfg: ModelConfig, params: Params, x, memory=None):
+    """Shared decoder trunk (train/loss path)."""
+    prefix, period, n_periods = plan_layers(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    for ld, p in zip(prefix, params["prefix"]):
+        x, aux = _block_train(cfg, ld, p, x, aux)
+
+    has_cross = cfg.family == "encdec"
+
+    def body(carry, xs):
+        x, aux = carry
+        if has_cross:
+            slice_p, cross_p = xs
+        else:
+            slice_p, cross_p = xs, None
+        for j, ld in enumerate(period):
+            cp = cross_p if (has_cross and j == 0) else None
+
+            def one(p_, x_, aux_, cp_, ld=ld):
+                return _block_train(cfg, ld, p_, x_, aux_, cross_p=cp_,
+                                    memory=memory)
+
+            if cfg.remat and len(period) > 1:
+                # Nested remat: inside a multi-layer period body, keep only
+                # ONE layer's activations live during the backward pass.
+                one = jax.checkpoint(one, static_argnums=())
+            x, aux = one(slice_p[j], x, aux, cp)
+        return (x, aux), None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body_fn = jax.checkpoint(body, policy=policy)
+    else:
+        body_fn = body
+    xs = tuple(params["period"])
+    if has_cross:
+        (x, aux), _ = jax.lax.scan(
+            body_fn, (x, aux), (xs, params["cross"]))
+    else:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux), xs)
+    return _norm(cfg, params["final_norm"], x), aux
+
+
+def _encode(cfg: ModelConfig, params: Params, frames: jnp.ndarray):
+    """Encoder trunk over stub frame embeddings (bidirectional)."""
+    x = frames
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, p):
+        h = _norm(cfg, p["norm1"], x)
+        x = x + L.gqa_train(p["attn"], h, cfg, causal=False)
+        x = x + L.mlp(p["mlp"], _norm(cfg, p["norm2"], x))
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def _embed_tokens(cfg, params, tokens, frontend):
+    x = params["embed"][tokens]
+    if frontend is not None and cfg.family != "encdec":
+        x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _logits(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head
+    vp = logits.shape[-1]
+    if vp != cfg.vocab:  # mask padded vocab rows
+        pad_mask = jnp.arange(vp) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype),
+                           logits)
+    return logits
+
+
+def loss(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
+         ) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    frontend = batch.get("frontend")
+    x = _embed_tokens(cfg, params, tokens, frontend)
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(cfg, params, batch["frontend"])
+    x, aux = _backbone_train(cfg, params, x, memory=memory)
+    n_front = 0 if (frontend is None or cfg.family == "encdec") \
+        else frontend.shape[1]
+    x = x[:, n_front:, :]
+    logits = _logits(cfg, params, x)
+    tgt = batch.get("targets")
+    if tgt is None:
+        tgt = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    logits = partition.constrain(logits, "dp", None, "model")
+    # Streaming CE: nll = logsumexp(logits) - logits[target].  Never
+    # materializes an fp32 (B,S,V) tensor — max/exp/sum fuse into reduces
+    # over the vocab-sharded bf16 logits (perf iteration #2, EXPERIMENTS §Perf).
+    lf = logits.astype(jnp.float32)
+    mx = jax.lax.stop_gradient(jnp.max(lf, -1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - mx), -1)) + mx[..., 0]
+    tgt_logit = jnp.take_along_axis(lf, tgt[..., None], -1)[..., 0]
+    nll = lse - tgt_logit
+    mask = jnp.ones_like(nll).at[:, -1].set(0.0)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + 0.01 * aux
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode
+# --------------------------------------------------------------------------
+
+def _attn_cache_width(cfg: ModelConfig, s_max: int) -> int:
+    return min(s_max, cfg.swa_window) if cfg.swa_window else s_max
+
+
+def _init_layer_cache(cfg: ModelConfig, ldef: LayerDef, b: int, s_max: int,
+                      dtype=jnp.bfloat16):
+    hd = cfg.hd
+    if ldef.mixer == "attn":
+        w = _attn_cache_width(cfg, s_max)
+        return {"k": jnp.zeros((b, w, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((b, w, cfg.n_kv_heads, hd), dtype)}
+    if ldef.mixer == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((b, s_max, m.kv_lora), dtype),
+                "kr": jnp.zeros((b, s_max, m.qk_rope), dtype)}
+    return S.init_ssm_state(cfg, b, dtype)
+
+
+def init_cache(cfg: ModelConfig, b: int, s_max: int, dtype=jnp.bfloat16,
+               enc_len: int = 0) -> Dict[str, Any]:
+    prefix, period, n_periods = plan_layers(cfg)
+    cache: Dict[str, Any] = {
+        "prefix": [_init_layer_cache(cfg, ld, b, s_max, dtype)
+                   for ld in prefix],
+        "period": [jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape),
+            _init_layer_cache(cfg, ld, b, s_max, dtype))
+            for ld in period],
+    }
+    if cfg.family == "encdec":
+        cache["cross"] = {
+            "k": jnp.zeros((cfg.n_layers, b, enc_len, cfg.n_heads, cfg.hd),
+                           dtype),
+            "v": jnp.zeros((cfg.n_layers, b, enc_len, cfg.n_heads, cfg.hd),
+                           dtype)}
+    return cache
+
+
+def _block_decode(cfg, ldef, p, x, c, pos, cross_kv_l=None):
+    h = _norm(cfg, p["norm1"], x)
+    if ldef.mixer == "attn":
+        y, c = L.gqa_decode(p["attn"], h, c, pos, cfg)
+        x = x + y
+    elif ldef.mixer == "mla":
+        y, c = L.mla_decode(p["attn"], h, c, pos, cfg)
+        x = x + y
+    else:
+        y, c = S.ssm_decode(p["ssm"], h, c, cfg)
+        x = x + y
+    if cross_kv_l is not None:
+        # cross params folded into the same slot layout as train
+        x = x + L.cross_attention(cross_kv_l["p"],
+                                  _norm(cfg, p["norm2"], x),
+                                  cross_kv_l["kv"], cfg)
+    h2 = _norm(cfg, p["norm2"], x)
+    if ldef.ffn == "mlp":
+        x = x + L.mlp(p["mlp"], h2)
+    elif ldef.ffn == "moe":
+        x = x + M.moe_apply(p["moe"], h2, cfg)
+    return x, c
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict[str, Any],
+                token: jnp.ndarray, pos: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """token: (B,) int32; pos: scalar int32. Returns (logits (B,V), cache)."""
+    prefix, period, n_periods = plan_layers(cfg)
+    x = params["embed"][token][:, None, :]
+    new_prefix = []
+    for ld, p, c in zip(prefix, params["prefix"], cache["prefix"]):
+        x, c = _block_decode(cfg, ld, p, x, c, pos)
+        new_prefix.append(c)
+
+    has_cross = cfg.family == "encdec"
+
+    def body(x, xs):
+        if has_cross:
+            slice_p, slice_c, cross_p, cross_k, cross_v = xs
+        else:
+            slice_p, slice_c = xs
+        new_cs = []
+        for j, ld in enumerate(period):
+            ckv = ({"p": cross_p, "kv": {"k": cross_k, "v": cross_v}}
+                   if (has_cross and j == 0) else None)
+            x, cj = _block_decode(cfg, ld, slice_p[j], x, slice_c[j], pos,
+                                  cross_kv_l=ckv)
+            new_cs.append(cj)
+        return x, tuple(new_cs)
+
+    if has_cross:
+        x, new_period = jax.lax.scan(
+            body, x, (tuple(params["period"]), tuple(cache["period"]),
+                      params["cross"], cache["cross"]["k"],
+                      cache["cross"]["v"]))
+    else:
+        x, new_period = jax.lax.scan(
+            body, x, (tuple(params["period"]), tuple(cache["period"])))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = _logits(cfg, params, x)[:, 0, :]
+    new_cache = dict(cache)
+    new_cache["prefix"] = new_prefix
+    new_cache["period"] = list(new_period)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            s_max: Optional[int] = None):
+    """Run the full prompt, return (last logits, populated cache).
+
+    Implementation: train-style forward per block, capturing per-layer cache
+    entries (k/v, MLA latents, SSM final states).
+    """
+    tokens = batch["tokens"]
+    frontend = batch.get("frontend")
+    b, s = tokens.shape
+    prefix, period, n_periods = plan_layers(cfg)
+    x = _embed_tokens(cfg, params, tokens, frontend)
+    s_max = max(s_max or s, x.shape[1])  # frontend prefix rides in the cache
+    memory = None
+    cache = init_cache(cfg, b, s_max, enc_len=(
+        batch["frontend"].shape[1] if cfg.family == "encdec" else 0))
+    if cfg.family == "encdec":
+        memory = _encode(cfg, params, batch["frontend"])
+        kv = jax.vmap(lambda cp: None)  # placeholder (filled below)
+        ks, vs = [], []
+        n_l = params["cross"]["wq"]["w"].shape[0]
+        for li in range(n_l):
+            cp = jax.tree.map(lambda a: a[li], params["cross"])
+            kvl = L.cross_kv(cp, memory, cfg)
+            ks.append(kvl["k"])
+            vs.append(kvl["v"])
+        cache["cross"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+    s_tot = x.shape[1]  # includes any frontend prefix
+
+    def mixer_prefill(ld, p, h, c):
+        s = s_tot
+        if ld.mixer == "attn":
+            y, kv = L.gqa_train(p["attn"], h, cfg, return_kv=True)
+            w = c["k"].shape[1]
+            if w >= s:
+                ck = jax.lax.dynamic_update_slice(
+                    c["k"], kv["k"].astype(c["k"].dtype), (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    c["v"], kv["v"].astype(c["v"].dtype), (0, 0, 0, 0))
+            else:  # SWA ring: keep the tail, aligned to slot = pos % w
+                tail_k = kv["k"][:, -w:, :, :]
+                tail_v = kv["v"][:, -w:, :, :]
+                roll = (s - w) % w
+                ck = jnp.roll(tail_k, roll, axis=1).astype(c["k"].dtype)
+                cv = jnp.roll(tail_v, roll, axis=1).astype(c["v"].dtype)
+            return y, {"k": ck, "v": cv}
+        if ld.mixer == "mla":
+            # Rerun the latent path to harvest cache (cheap projections).
+            m = cfg.mla
+            y = L.mla_train(p["attn"], h, cfg)
+            ckv_full = L.linear(p["attn"]["wdkv"], h)
+            ckv = L.rmsnorm(p["attn"]["kv_norm"], ckv_full[..., :m.kv_lora])
+            kr = L.apply_rope(
+                ckv_full[..., m.kv_lora:].reshape(b, s, 1, m.qk_rope),
+                jnp.arange(s, dtype=jnp.int32), cfg.rope_theta)[:, :, 0]
+            cc = jax.lax.dynamic_update_slice(
+                c["ckv"], ckv.astype(c["ckv"].dtype), (0, 0, 0))
+            ckr = jax.lax.dynamic_update_slice(
+                c["kr"], kr.astype(c["kr"].dtype), (0, 0, 0))
+            return y, {"ckv": cc, "kr": ckr}
+        y, st = S.ssd_train(p["ssm"], h, cfg, return_state=True)
+        return y, st
+
+    def block_pf(ld, p, x, c, cross_p=None):
+        h = _norm(cfg, p["norm1"], x)
+        y, c = mixer_prefill(ld, p, h, c)
+        x = x + y
+        if cross_p is not None:
+            kv = L.cross_kv(cross_p, memory, cfg)
+            x = x + L.cross_attention(cross_p, _norm(cfg, p["norm2"], x),
+                                      kv, cfg)
+        h2 = _norm(cfg, p["norm2"], x)
+        if ld.ffn == "mlp":
+            x = x + L.mlp(p["mlp"], h2)
+        elif ld.ffn == "moe":
+            x = x + M.moe_apply(p["moe"], h2, cfg)
+        return x, c
+
+    new_prefix = []
+    for ld, p, c in zip(prefix, params["prefix"], cache["prefix"]):
+        x, c = block_pf(ld, p, x, c)
+        new_prefix.append(c)
+
+    has_cross = cfg.family == "encdec"
+
+    def body(x, xs):
+        if has_cross:
+            slice_p, slice_c, cross_p = xs
+        else:
+            slice_p, slice_c = xs
+            cross_p = None
+        new_cs = []
+        for j, ld in enumerate(period):
+            x, cj = block_pf(ld, slice_p[j], x, slice_c[j],
+                             cross_p=cross_p if (has_cross and j == 0)
+                             else None)
+            new_cs.append(cj)
+        return x, tuple(new_cs)
+
+    if has_cross:
+        x, new_period = jax.lax.scan(
+            body, x, (tuple(params["period"]), tuple(cache["period"]),
+                      params["cross"]))
+    else:
+        x, new_period = jax.lax.scan(
+            body, x, (tuple(params["period"]), tuple(cache["period"])))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = _logits(cfg, params, x[:, -1:, :])[:, 0, :]
+    cache["prefix"] = new_prefix
+    cache["period"] = list(new_period)
+    return logits, cache

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (EP-shardable).
+
+Dispatch avoids the O(T·E·C) one-hot einsum: routed copies are sorted by
+expert, ranked within expert (searchsorted-on-self), and scattered into an
+(E, C, d) buffer — O(T·k·d) data movement plus the true expert FLOPs.  Under
+GSPMD the (E, ...) axes shard over the `model` mesh axis (expert parallelism);
+the scatter/gather lower to all-to-all-style collectives — the same bucketed
+exchange shape as the distributed graph-update router (core/distributed.py).
+
+Supports: top-k routing with capacity dropping, shared experts (DeepSeek-V2),
+parallel dense residual (Arctic), leading dense layers (DeepSeek-V2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from .layers import init_linear, init_mlp, linear, mlp
+from .partition import constrain
+
+Params = Dict[str, Any]
+
+
+def expert_capacity(n_tokens: int, m: MoEConfig,
+                    override: float = 0.0) -> int:
+    factor = override if override else m.capacity_factor
+    c = int(math.ceil(n_tokens * m.top_k * factor / m.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    m = cfg.moe
+    d, ff = cfg.d_model, m.d_expert
+    ks = jax.random.split(key, 6)
+    scale_in = d ** -0.5
+    scale_out = ff ** -0.5
+    p: Params = {
+        "router": init_linear(ks[0], d, m.n_experts, dtype=jnp.float32),
+        "wg": jax.random.normal(ks[1], (m.n_experts, d, ff), dtype) * scale_in,
+        "wu": jax.random.normal(ks[2], (m.n_experts, d, ff), dtype) * scale_in,
+        "wd": jax.random.normal(ks[3], (m.n_experts, ff, d), dtype) * scale_out,
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(ks[4], d, m.n_shared * ff, dtype)
+    if m.dense_residual:
+        p["dense"] = init_mlp(ks[5], d, cfg.d_ff, dtype)
+    return p
+
+
+def _n_dispatch_groups(t: int) -> int:
+    """Token groups for locality-preserving dispatch = the DP shard count
+    when a mesh is active (so every token-side sort/scatter stays sharded),
+    else 1.  Must divide T."""
+    from .partition import _axsize, _dp_bundle, current_mesh
+    mesh = current_mesh()
+    g = 1
+    if mesh is not None:
+        g = _axsize(mesh, _dp_bundle(mesh))
+    g = min(g, t)
+    while t % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: [B, S, d] -> [B, S, d].
+
+    Group-local sort-based dispatch: tokens are grouped by DP shard (leading
+    dim G), so argsort/rank/scatter are all batched-per-group and GSPMD keeps
+    them sharded (a global 2M-element sort would be replicated onto every
+    device — the 500 GB/device pathology of the naive layout, see
+    EXPERIMENTS.md §Perf).  Expert buffers (G, E, cap_g, d) shard G over dp
+    and E over model (= expert parallelism); the group<->expert exchange
+    lowers to the same bucketed all-to-all as the distributed graph router.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    G = _n_dispatch_groups(t)
+    tg = t // G
+    capg = expert_capacity(tg, m, override=cfg.moe_capacity_override)
+    xt = x.reshape(G, tg, d)
+    xt = constrain(xt, "dp", None, None)
+
+    logits = linear(p["router"], xt.astype(jnp.float32))     # (G, tg, E)
+    gates, ids = jax.lax.top_k(jax.nn.softmax(logits, -1), m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- group-local sort dispatch ----------------------------------------
+    e_flat = ids.reshape(G, tg * m.top_k)
+    tok_flat = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), m.top_k)[None]
+    gate_flat = gates.reshape(G, tg * m.top_k)
+    order = jnp.argsort(e_flat, axis=1, stable=True)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    first = jax.vmap(
+        lambda es: jnp.searchsorted(es, es, side="left"))(e_sorted)
+    rank = (jnp.arange(tg * m.top_k, dtype=jnp.int32)[None]
+            - first.astype(jnp.int32))
+    keep = rank < capg
+    slot = jnp.where(keep, e_sorted * capg + rank, m.n_experts * capg)
+
+    tok_sorted = jnp.take_along_axis(
+        jnp.broadcast_to(tok_flat, e_flat.shape), order, axis=1)
+    gate_sorted = jnp.take_along_axis(gate_flat, order, axis=1)
+
+    # INDEX-based dispatch (§Perf A5): scatter int32 token indices and bf16
+    # gates into the slot layout, then gather rows once.  The (T·k, d)
+    # routed-copy tensors never exist (they were 8 GB f32 EACH for
+    # DeepSeek-V2 prefill — the invariant 151 GB/dev peak).
+    def scatter_idx(sl, tok, gt):
+        idx = jnp.full((m.n_experts * capg,), tg, jnp.int32).at[sl].set(
+            tok, mode="drop")
+        gts = jnp.zeros((m.n_experts * capg,), jnp.bfloat16).at[sl].set(
+            gt.astype(jnp.bfloat16), mode="drop")
+        return idx, gts
+
+    idx_disp, gate_disp = jax.vmap(scatter_idx)(slot, tok_sorted,
+                                                gate_sorted)
+    xt_pad = jnp.concatenate(
+        [xt, jnp.zeros((G, 1, d), x.dtype)], axis=1)  # row tg = zeros
+    x_disp = jnp.take_along_axis(xt_pad, idx_disp[..., None], axis=1)
+    x_disp = constrain(x_disp.reshape(G, m.n_experts, capg, d),
+                       "dp", "model", None, None)
+
+    # --- expert compute (E over model = EP; G over dp) ---------------------
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_disp, p["wg"])) * \
+        jnp.einsum("gecd,edf->gecf", x_disp, p["wu"])
+    h = constrain(h, "dp", "model", None, None)
+    y_exp = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    y_flat = y_exp.reshape(G, m.n_experts * capg, d)
+    y_flat = y_flat * gate_disp[..., None].astype(y_flat.dtype)
+
+    # --- combine: scatter-add weighted expert outputs back to tokens -------
+    def combine_g(idx, yf):
+        return jnp.zeros((tg + 1, d), x.dtype).at[idx].add(
+            yf.astype(x.dtype))[:tg]
+
+    y = jax.vmap(combine_g)(idx_disp, y_flat)
+    y = constrain(y, "dp", None, None)
+
+    if m.n_shared:
+        y = y + mlp(p["shared"], xt)
+    if m.dense_residual:
+        y = y + mlp(p["dense"], xt)
+    return y.reshape(b, s, d)
+
+
+def aux_load_balance_loss(p: Params, x: jnp.ndarray,
+                          cfg: ModelConfig) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary (used by train_step)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = linear(p["router"], xt.astype(jnp.float32))
+    pr = jax.nn.softmax(logits, -1)
+    _, ids = jax.lax.top_k(pr, m.top_k)
+    frac = jnp.mean(
+        jax.nn.one_hot(ids, m.n_experts, dtype=jnp.float32), axis=(0, 1))
+    imp = jnp.mean(pr, 0)
+    return m.n_experts * jnp.sum(frac * imp)

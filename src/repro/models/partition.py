@@ -1,0 +1,87 @@
+"""Activation-sharding context for model code.
+
+Model functions call `constrain(x, *spec)` at the few points where GSPMD's
+default propagation picks catastrophic layouts (logits, attention scores,
+MoE dispatch).  Outside a mesh context the calls are no-ops, so smoke tests
+and single-device runs are untouched.
+
+Axis-name conventions: "dp" resolves to the data-parallel bundle
+(('pod','data') on multi-pod meshes), "model" to tensor/expert parallel.
+Specs degrade to replication on non-divisible dims, mirroring
+launch/shardings._fit.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def _dp_bundle(mesh: Mesh):
+    names = [a for a in mesh.axis_names if a in ("pod", "data")]
+    return tuple(names) if len(names) > 1 else (names[0] if names else None)
+
+
+@contextlib.contextmanager
+def shard_context(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def _axsize(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint with 'dp' resolution + divisibility guard."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, ax in zip(x.shape, spec):
+        if ax == "dp":
+            ax = _dp_bundle(mesh)
+        if ax is not None and "model" == ax and "model" not in mesh.axis_names:
+            ax = None
+        if ax is not None and dim % _axsize(mesh, ax) != 0:
+            ax = None
+        resolved.append(ax)
+    resolved += [None] * (len(x.shape) - len(resolved))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def constrain_scores(s):
+    """Attention scores (B, H, Q, K): shard H over model when divisible,
+    else fall back to sharding Q (few-KV/odd-head archs like qwen2-1.5b's
+    12 heads on a 16-way model axis)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return s
+    msize = _axsize(mesh, "model") if "model" in mesh.axis_names else 1
+    if s.shape[1] % msize == 0:
+        return constrain(s, "dp", "model", None, None)
+    # Fallback: shard the KEY dim (sequence-parallel scores) — softmax then
+    # runs on sharded K with small (B,H,Q) partial-reduce collectives, and
+    # the dot's RHS (k-proj) aligns without involuntary resharding.
+    return constrain(s, "dp", None, None, "model")

@@ -1,0 +1,53 @@
+"""AdamW with ZeRO-friendly state layout.
+
+Moments are stored in the PARAM's dtype layout but fp32 master copies of the
+statistics; state shards exactly like the params (the launcher's in_shardings
+apply the same NamedSharding tree to params, m and v — ZeRO-3 by
+construction, no separate partitioner needed).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1
+                 ) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    b1t = 1.0 - b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m_new / b1t
+        vh = v_new / b2t
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        return (p - (lr * delta).astype(p.dtype), m_new, v_new)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,6 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from .analysis import (HW, RooflineReport, analyze_compiled,
+                       collective_bytes_from_hlo, model_flops)
+
+__all__ = ["HW", "RooflineReport", "analyze_compiled",
+           "collective_bytes_from_hlo", "model_flops"]

@@ -1,0 +1,190 @@
+"""Three-term roofline from a compiled (dry-run) executable.
+
+    compute    = HLO_FLOPs   / (chips x peak_FLOP/s)
+    memory     = HLO_bytes   / (chips x HBM_bw)
+    collective = coll_bytes  / (chips x link_bw)
+
+`compiled.cost_analysis()` reports the PER-DEVICE program (SPMD module), so
+its flops/bytes x chips give the global quantities; the formulas above divide
+right back — i.e. the per-device cost over per-chip peak IS the term.
+Collective bytes are not in cost_analysis: we parse the optimized HLO and sum
+OPERAND sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (shape map built from instruction defs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e-like target (per chip)."""
+
+    peak_flops: float = 197e12        # bf16
+    hbm_bw: float = 819e9             # B/s
+    link_bw: float = 50e9             # B/s per ICI link
+    hbm_bytes: float = 16e9
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_DEF_RE = re.compile(
+    r"%?([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*\(?.*?\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind over the optimized module."""
+    shapes: Dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        name, dtype, dims = m.groups()
+        if dtype in _DTYPE_BYTES:
+            shapes[name] = _shape_bytes(dtype, dims)
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind, args = m.groups()
+        if "-done" in line.split("=")[1][:60]:
+            continue  # the -done op re-lists the -start operand
+        total = 0
+        for arg in args.split(","):
+            arg = arg.strip().lstrip("%")
+            arg = arg.split(" ")[0]
+            if arg in shapes:
+                total += shapes[arg]
+            else:
+                # typed inline operand e.g. "bf16[128,1024] %x"
+                tm = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", arg)
+                if tm and tm.group(1) in _DTYPE_BYTES:
+                    total += _shape_bytes(*tm.groups())
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    peak_memory_per_device: float
+    model_flops: float
+
+    hw: HW = dataclasses.field(default_factory=HW)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / self.hw.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the bound step time: how close the
+        step is to the compute roofline if the dominant term were the only
+        cost.  = t_model_compute / max(all terms)."""
+        t_model = (self.model_flops / self.chips) / self.hw.peak_flops
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective,
+                      1e-30)
+        return t_model / t_bound
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        tot = self.flops_per_device * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    def to_json(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for inference
+    (per step: prefill D = B·S tokens; decode D = B tokens)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq
+
+
+def analyze_compiled(compiled, lowered_text: Optional[str], *, arch: str,
+                     shape_cfg: ShapeConfig, cfg: ModelConfig, mesh_name: str,
+                     chips: int, flops_correction: float = 0.0,
+                     bytes_correction: float = 0.0) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0)) + flops_correction
+    byt = float(ca.get("bytes accessed", 0.0)) + bytes_correction
+    hlo = lowered_text if lowered_text is not None else compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    coll_total = float(sum(coll.values()))
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(getattr(ma, "temp_size_in_bytes", 0)
+                     + getattr(ma, "argument_size_in_bytes", 0)
+                     + getattr(ma, "output_size_in_bytes", 0)
+                     - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = 0.0
+    return RooflineReport(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byt,
+        collective_bytes_per_device=coll_total, coll_breakdown=coll,
+        peak_memory_per_device=peak,
+        model_flops=model_flops(cfg, shape_cfg))

@@ -1,0 +1,5 @@
+"""Runtime: fault tolerance, straggler mitigation, monitoring."""
+from .fault import FaultTolerantLoop, SimulatedFailure
+from .monitor import StepMonitor
+
+__all__ = ["FaultTolerantLoop", "SimulatedFailure", "StepMonitor"]

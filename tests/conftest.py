@@ -1,0 +1,16 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def small_store_cfg(**kw):
+    from repro.core import StoreConfig
+    base = dict(vmax=1 << 12, mem_edges=1 << 10, seg_size=4,
+                n_segments=1 << 10, hash_slots=1 << 12, ovf_cap=1 << 12,
+                batch_cap=256, l0_run_limit=2, seg_target_edges=1 << 10)
+    base.update(kw)
+    return StoreConfig(**base)

@@ -1,0 +1,88 @@
+"""MemGraph: hashed segment pool + overflow tier (paper §4.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import memgraph as mg_mod
+from repro.core.types import EdgeBatch, StoreConfig
+from conftest import small_store_cfg
+
+
+def _batch(src, dst, ts0=0, marker=False, bc=256):
+    n = len(src)
+    def pad(a, dtype):
+        out = np.zeros(bc, dtype)
+        out[:n] = a
+        return jnp.asarray(out)
+    return EdgeBatch(
+        src=pad(src, np.int32), dst=pad(dst, np.int32),
+        ts=pad(np.arange(ts0, ts0 + n), np.int32),
+        prop=pad(np.ones(n), np.float32),
+        marker=jnp.asarray(np.r_[np.full(n, marker), np.zeros(bc - n, bool)]),
+        n=jnp.asarray(n, jnp.int32))
+
+
+def test_insert_and_scan_low_degree():
+    cfg = small_store_cfg()
+    mg = mg_mod.empty_memgraph(cfg)
+    mg, ok = mg_mod.insert_batch(mg, _batch([7, 7, 9], [1, 2, 3]))
+    assert bool(ok)
+    d, t, m, p, mask = mg_mod.scan_vertex(mg, jnp.asarray(7), cap=16)
+    got = sorted(np.asarray(d)[np.asarray(mask)].tolist())
+    assert got == [1, 2]
+
+
+def test_overflow_to_skiplist_tier():
+    cfg = small_store_cfg(seg_size=4)
+    mg = mg_mod.empty_memgraph(cfg)
+    # 10 edges for one vertex: 4 in segment, 6 in overflow.
+    mg, ok = mg_mod.insert_batch(mg, _batch([3] * 10, list(range(10))))
+    assert bool(ok)
+    assert int(mg.ovf_n) == 6 and int(mg.seg_len[0]) == 10
+    d, t, m, p, mask = mg_mod.scan_vertex(mg, jnp.asarray(3), cap=16)
+    assert sorted(np.asarray(d)[np.asarray(mask)].tolist()) == list(range(10))
+
+
+def test_hash_collision_resolution_many_keys():
+    cfg = small_store_cfg(hash_slots=1 << 10, n_segments=1 << 10)
+    mg = mg_mod.empty_memgraph(cfg)
+    # 600 distinct keys into 1024 slots: plenty of collisions, must resolve.
+    keys = np.arange(0, 600, dtype=np.int32)
+    for off in range(0, 600, 200):
+        mg, ok = mg_mod.insert_batch(
+            mg, _batch(keys[off:off + 200], keys[off:off + 200]))
+        assert bool(ok)
+    rows = mg_mod.lookup_rows(mg, jnp.asarray(keys))
+    assert int(jnp.min(rows)) >= 0
+    assert len(set(np.asarray(rows).tolist())) == 600  # distinct rows
+
+
+def test_flush_arrays_roundtrip():
+    cfg = small_store_cfg()
+    mg = mg_mod.empty_memgraph(cfg)
+    src = np.array([5, 1, 5, 2, 5, 5, 5], np.int32)
+    dst = np.array([9, 8, 7, 6, 5, 4, 3], np.int32)
+    mg, _ = mg_mod.insert_batch(mg, _batch(src, dst))
+    fs, fd, ft, fm, fp, n = mg_mod.flush_arrays(mg)
+    n = int(n)
+    assert n == 7
+    pairs = sorted(zip(np.asarray(fs)[:n].tolist(), np.asarray(fd)[:n].tolist()))
+    assert pairs == sorted(zip(src.tolist(), dst.tolist()))
+
+
+def test_skiplist_only_mode():
+    cfg = small_store_cfg(memcache_mode="skiplist_only")
+    mg = mg_mod.empty_memgraph(cfg)
+    mg, ok = mg_mod.insert_batch(mg, _batch([1, 2, 1], [5, 6, 7]),
+                                 mode="skiplist_only")
+    assert bool(ok) and int(mg.ovf_n) == 3 and int(mg.n_rows) == 0
+    d, t, m, p, mask = mg_mod.scan_vertex(mg, jnp.asarray(1), cap=8)
+    assert sorted(np.asarray(d)[np.asarray(mask)].tolist()) == [5, 7]
+
+
+def test_should_flush_triggers():
+    cfg = small_store_cfg(mem_edges=8)
+    mg = mg_mod.empty_memgraph(cfg)
+    assert not mg_mod.memgraph_should_flush(mg, cfg)
+    mg, _ = mg_mod.insert_batch(mg, _batch(list(range(8)), list(range(8))))
+    assert mg_mod.memgraph_should_flush(mg, cfg)

@@ -1,0 +1,23 @@
+"""Latent-chunked MLA prefill (§Perf A6) == standard MLA path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.models import layers as L
+
+
+def test_latent_chunked_equals_standard():
+    base = reduced_config("deepseek-v2-236b")
+    cfg_std = dataclasses.replace(base, mla_absorbed_prefill=False)
+    cfg_lat = dataclasses.replace(base, mla_absorbed_prefill=True)
+    p = L.init_mla(jax.random.key(0), cfg_std, dtype=jnp.float32)
+    # the latent path gates on s > 4096
+    x = jax.random.normal(jax.random.key(1), (1, 4608, cfg_std.d_model),
+                          jnp.float32) * 0.2
+    y_std = L.mla_train(p, x, cfg_std)
+    y_lat = L.mla_train(p, x, cfg_lat)
+    np.testing.assert_allclose(np.asarray(y_std), np.asarray(y_lat),
+                               rtol=3e-3, atol=3e-3)

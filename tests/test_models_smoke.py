@@ -1,0 +1,103 @@
+"""Per-arch smoke tests: REDUCED config of the same family — one forward /
+train step on CPU asserting output shapes + no NaNs (assignment brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models import decode_step, init_params, loss, prefill
+
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    tokens = jax.random.randint(key, (B, S), 1, cfg.vocab)
+    batch = {"tokens": tokens}
+    if cfg.frontend == "vision":
+        batch["frontend"] = jax.random.normal(key, (B, 8, cfg.d_model),
+                                              jnp.float32)
+    if cfg.family == "encdec":
+        batch["frontend"] = jax.random.normal(key, (B, 32, cfg.d_model),
+                                              jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    batch = _batch(cfg, jax.random.key(1))
+    l, grads = jax.value_and_grad(lambda p: loss(cfg, p, batch))(params)
+    assert np.isfinite(float(l))
+    gnorm = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: float(jnp.sum(jnp.square(
+            g.astype(jnp.float32)))), grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    batch = _batch(cfg, jax.random.key(1))
+    logits, cache = prefill(cfg, params, batch, s_max=S + 4)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = decode_step(cfg, params, cache, tok,
+                                 jnp.asarray(S, jnp.int32))
+    assert logits2.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_full_configs_param_counts():
+    """The FULL configs match their billed sizes (exercised via dry-run only;
+    here we check the analytic parameter count is in the right ballpark)."""
+    expect = {
+        "internvl2-26b": (15e9, 30e9),     # LM backbone only (no ViT)
+        "stablelm-1.6b": (1.2e9, 2.2e9),
+        "h2o-danube-3-4b": (3e9, 5e9),
+        "qwen2-7b": (6e9, 9e9),
+        "qwen2-1.5b": (1.2e9, 2.0e9),
+        "whisper-small": (0.15e9, 0.45e9),
+        "jamba-v0.1-52b": (40e9, 60e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "arctic-480b": (430e9, 520e9),
+        "deepseek-v2-236b": (180e9, 260e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B not in [{lo/1e9}-{hi/1e9}]"
+
+
+def test_decode_matches_prefill_continuation():
+    """decode_step(prefill(t[:k])) logits == prefill(t[:k+1]) next-token
+    logits (dense arch): the cache path is consistent with the train path."""
+    cfg = reduced_config("stablelm-1.6b")
+    params = init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.key(2), (1, 16), 1, cfg.vocab)
+    lg_a, cache = prefill(cfg, params, {"tokens": toks[:, :15]}, s_max=32)
+    lg_b, _ = decode_step(cfg, params, cache, toks[:, 15],
+                          jnp.asarray(15, jnp.int32))
+    lg_full, _ = prefill(cfg, params, {"tokens": toks}, s_max=32)
+    # decode reads the bf16 KV cache; prefill attends in fp32 -> ~0.3% drift
+    np.testing.assert_allclose(np.asarray(lg_b), np.asarray(lg_full),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_decode_matches_prefill_ssm():
+    """Recurrent decode continues the chunked-SSD prefill state exactly:
+    prefill(24) + 8 decode steps == prefill(32) next-token logits."""
+    cfg = reduced_config("mamba2-2.7b")
+    params = init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.key(2), (1, 33), 1, cfg.vocab)
+    _, cache = prefill(cfg, params, {"tokens": toks[:, :24]}, s_max=64)
+    lg = None
+    for i in range(24, 32):
+        lg, cache = decode_step(cfg, params, cache, toks[:, i],
+                                jnp.asarray(i, jnp.int32))
+    lg_full, _ = prefill(cfg, params, {"tokens": toks[:, :32]}, s_max=64)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,100 @@
+"""MoE dispatch and SSD block against naive references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import MoEConfig
+import dataclasses
+
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import linear
+
+
+def test_moe_matches_dense_reference():
+    """Sort-based capacity dispatch == per-token dense routing (capacity
+    large enough that nothing drops)."""
+    cfg = reduced_config("arctic-480b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                     dense_residual=False))
+    m = cfg.moe
+    p = moe_mod.init_moe(jax.random.key(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model), jnp.float32)
+    y = moe_mod.moe_apply(p, x, cfg)
+
+    # naive reference
+    xt = x.reshape(-1, cfg.d_model)
+    logits = linear(p["router"], xt)
+    gates, ids = jax.lax.top_k(jax.nn.softmax(logits, -1), m.top_k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        acc = jnp.zeros((cfg.d_model,))
+        for j in range(m.top_k):
+            e = int(ids[t, j])
+            h = jax.nn.silu(xt[t] @ p["wg"][e]) * (xt[t] @ p["wu"][e])
+            acc = acc + gates[t, j] * (h @ p["wd"][e])
+        ref = ref.at[t].set(acc)
+    # gates ride the dispatch in bf16 (§Perf A5) -> ~0.4% quantization
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_drops_gracefully():
+    cfg = reduced_config("arctic-480b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.1))
+    p = moe_mod.init_moe(jax.random.key(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    y = moe_mod.moe_apply(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_aux_loss_range():
+    cfg = reduced_config("deepseek-v2-236b")
+    p = moe_mod.init_moe(jax.random.key(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    aux = moe_mod.aux_load_balance_loss(p, x, cfg)
+    assert float(aux) >= 0.99  # >= 1 at perfect balance, ~E at collapse
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == per-token linear recurrence."""
+    cfg = reduced_config("mamba2-2.7b")
+    p = ssm_mod.init_ssm(jax.random.key(0), cfg, dtype=jnp.float32)
+    b, s = 1, 24
+    x = jax.random.normal(jax.random.key(1), (b, s, cfg.d_model),
+                          jnp.float32) * 0.3
+    y_chunk = ssm_mod.ssd_train(p, x, cfg)
+
+    # naive recurrence via repeated single-step decode
+    state = ssm_mod.init_ssm_state(cfg, b, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        yt, state = ssm_mod.ssm_decode(p, x[:, t:t + 1], state, cfg)
+        outs.append(yt)
+    y_rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ssd_state_harvest_continues():
+    cfg = reduced_config("mamba2-2.7b")
+    p = ssm_mod.init_ssm(jax.random.key(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 16, cfg.d_model),
+                          jnp.float32) * 0.3
+    y_full = ssm_mod.ssd_train(p, x, cfg)
+    y8, st = ssm_mod.ssd_train(p, x[:, :8], cfg, return_state=True)
+    st = {"h": st["h"], "conv": st["conv"].astype(jnp.float32)}
+    outs = [y8]
+    for t in range(8, 16):
+        yt, st = ssm_mod.ssm_decode(p, x[:, t:t + 1], st, cfg)
+        outs.append(yt)
+    y_cont = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_cont),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,41 @@
+"""Fill EXPERIMENTS.md placeholders from the dry-run JSON records.
+
+    PYTHONPATH=src python tools/fill_experiments.py
+"""
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline.report import dryrun_summary, load_records, roofline_table  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main() -> None:
+    recs = load_records(os.path.join(ROOT, "experiments", "dryrun"))
+    with open(os.path.join(ROOT, "EXPERIMENTS.md")) as f:
+        text = f.read()
+
+    text = re.sub(
+        r"<!-- DRYRUN_SUMMARY -->.*?(?=\n\nSkips)",
+        "<!-- DRYRUN_SUMMARY -->\n" + dryrun_summary(recs),
+        text, flags=re.S)
+
+    table = ("<!-- ROOFLINE_TABLE -->\n### Single-pod (256 chips)\n\n"
+             + roofline_table(recs, "single")
+             + "\n\n### Multi-pod (512 chips) — memory/collective deltas\n\n"
+             + roofline_table(recs, "multipod"))
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n\n## §Perf)",
+                  table, text, flags=re.S)
+
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated with",
+          len([r for r in recs if r.get("status") == "ok"]), "ok cells")
+
+
+if __name__ == "__main__":
+    main()
