@@ -1,0 +1,17 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: tier1 test bench
+
+# Fast verification gate: everything except the `slow`-marked end-to-end
+# tests (test_distributed.py spawns an 8-device subprocess mesh,
+# test_system.py runs full ingest->analyze->update sweeps).
+tier1:
+	$(PY) -m pytest -x -q -m "not slow"
+
+# Full sweep — the canonical tier-1 command from ROADMAP.md.
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run

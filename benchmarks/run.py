@@ -12,7 +12,8 @@ import traceback
 
 def main() -> None:
     from . import (bench_analytics, bench_index, bench_kernels,
-                   bench_memcache, bench_mixed, bench_space, bench_update)
+                   bench_memcache, bench_mixed, bench_read_batch,
+                   bench_space, bench_update)
     suites = [
         ("fig10/11 updates", bench_update.main),
         ("fig12/13 analytics", bench_analytics.main),
@@ -21,6 +22,7 @@ def main() -> None:
         ("fig16/17 index", bench_index.main),
         ("fig18 mixed", bench_mixed.main),
         ("kernels", bench_kernels.main),
+        ("batched reads", bench_read_batch.main),
     ]
     print("name,us_per_call,derived")
     failures = 0

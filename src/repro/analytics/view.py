@@ -43,32 +43,75 @@ class CSRView(NamedTuple):
         return jnp.minimum(j, self.n_vertices - 1)
 
 
-def _collect(snapshot: Snapshot):
-    src_l, dst_l, ts_l, mk_l, pr_l = [], [], [], [], []
-    for (src, dst, ts, marker, prop, _fid) in snapshot.all_run_records():
-        src_l.append(src)
-        dst_l.append(dst)
-        ts_l.append(ts)
-        mk_l.append(marker)
-        pr_l.append(prop)
-    if not src_l:
+def _merge_two_sorted(a, b):
+    """Merge two (src, dst, ts)-sorted record tuples with the Pallas
+    merge-path kernel (kernels/merge.py): O(n) device merge instead of a
+    host lexsort over the concatenation."""
+    from ..core.csr import quantize_cap
+    from ..kernels import ops as kops
+    na, nb = len(a[0]), len(b[0])
+    acap, bcap = quantize_cap(na), quantize_cap(nb)
+    i32max = np.iinfo(np.int32).max
+
+    def keys(rec, cap):
+        out = []
+        for col in rec[:3]:
+            p = np.full(cap, i32max, np.int32)
+            p[:len(col)] = col
+            out.append(jnp.asarray(p))
+        return tuple(out)
+
+    perm = np.asarray(kops.merge_perm(keys(a, acap), keys(b, bcap),
+                                      na, nb))[:na + nb]
+    cols = []
+    for ca, cb in zip(a, b):
+        pa = np.zeros(acap, ca.dtype)
+        pa[:na] = ca
+        cols.append(np.concatenate([pa, cb])[perm])
+    return tuple(cols)
+
+
+def _collect_sorted(snapshot: Snapshot):
+    """All visible records, (src, dst, ts)-lexsorted.
+
+    CSR runs arrive pre-sorted (fid is not None); MemGraph tiers arrive in
+    arrival order and are sorted individually.  The common 2-source shape
+    (e.g. one L0 run + one L1 segment after a flush) merges on-device with
+    the merge-path kernel; k > 2 sources fall back to one host lexsort
+    (the TPU path would be a bitonic sort, csr._merge_impl)."""
+    sources = []
+    for (src, dst, ts, marker, prop, fid) in snapshot.all_run_records():
+        if len(src) == 0:
+            continue
+        rec = (np.asarray(src, np.int32), np.asarray(dst, np.int32),
+               np.asarray(ts, np.int32), np.asarray(marker, bool),
+               np.asarray(prop, np.float32))
+        if fid is None:  # MemGraph tier: arrival order — sort this source
+            order = np.lexsort((rec[2], rec[1], rec[0]))
+            rec = tuple(c[order] for c in rec)
+        sources.append(rec)
+    if not sources:
         z = np.zeros(0, np.int64)
         return z, z, z, np.zeros(0, bool), np.zeros(0, np.float32)
-    return (np.concatenate(src_l).astype(np.int64),
-            np.concatenate(dst_l).astype(np.int64),
-            np.concatenate(ts_l).astype(np.int64),
-            np.concatenate(mk_l).astype(bool),
-            np.concatenate(pr_l).astype(np.float32))
+    if len(sources) == 1:
+        src, dst, ts, marker, prop = sources[0]
+    elif len(sources) == 2:
+        src, dst, ts, marker, prop = _merge_two_sorted(*sources)
+    else:
+        cat = tuple(np.concatenate([s[i] for s in sources])
+                    for i in range(5))
+        order = np.lexsort((cat[2], cat[1], cat[0]))
+        src, dst, ts, marker, prop = (c[order] for c in cat)
+    return (src.astype(np.int64), dst.astype(np.int64), ts.astype(np.int64),
+            marker, prop)
 
 
 def materialize_csr(snapshot: Snapshot, n_vertices: int) -> CSRView:
     """Exact live adjacency at snapshot.tau as one dense CSR."""
-    src, dst, ts, marker, prop = _collect(snapshot)
-    vis = ts <= snapshot.tau
-    src, dst, ts, marker, prop = (a[vis] for a in (src, dst, ts, marker, prop))
-    order = np.lexsort((ts, dst, src))
-    src, dst, ts, marker, prop = (a[order] for a in (src, dst, ts, marker,
-                                                     prop))
+    src, dst, ts, marker, prop = _collect_sorted(snapshot)
+    vis = ts <= snapshot.tau  # order-preserving filter on sorted records
+    src, dst, ts, marker, prop = (a[vis] for a in (src, dst, ts, marker,
+                                                   prop))
     last = np.ones(len(src), bool)
     if len(src):
         last[:-1] = (src[:-1] != src[1:]) | (dst[:-1] != dst[1:])
@@ -98,15 +141,17 @@ def multilevel_views(snapshot: Snapshot, *, weighted: bool = False
     history alternates insert/delete, so Σ(±) telescopes to live membership.
     """
     out: List[RunView] = []
-    for (src, dst, ts, marker, prop, _fid) in snapshot.all_run_records():
+    for (src, dst, ts, marker, prop, fid) in snapshot.all_run_records():
         vis = ts <= snapshot.tau
         base = prop if weighted else np.ones(len(src), np.float32)
         wt = np.where(marker, -base, base) * vis
-        # CSR runs arrive src-sorted; MemGraph records are in arrival order —
-        # sort so the segment kernel's rank compression applies uniformly.
-        order = np.argsort(src, kind="stable")
-        out.append(RunView(src=jnp.asarray(src[order], jnp.int32),
-                           dst=jnp.asarray(dst[order], jnp.int32),
-                           wt=jnp.asarray(wt[order], jnp.float32)))
+        # CSR runs (fid set) arrive src-sorted — only MemGraph tiers need
+        # the host sort for the segment kernel's rank compression.
+        if fid is None:
+            order = np.argsort(src, kind="stable")
+            src, dst, wt = src[order], dst[order], wt[order]
+        out.append(RunView(src=jnp.asarray(src, jnp.int32),
+                           dst=jnp.asarray(dst, jnp.int32),
+                           wt=jnp.asarray(wt, jnp.float32)))
         snapshot._store.io.analytics_read += int(vis.sum()) * BYTES_PER_EDGE
     return out

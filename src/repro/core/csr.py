@@ -71,6 +71,42 @@ def run_lookup(run: CSRRunArrays, v: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndar
     return found, jnp.where(found, start, 0), jnp.where(found, end, 0)
 
 
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def run_lookup_batch(run: CSRRunArrays, vs: jnp.ndarray,
+                     *, use_pallas: bool = False):
+    """Vectorized `run_lookup`: (found, start, end) for a whole int32 query
+    vector in one jit'd binary-search pass (optionally the Pallas batched
+    bisection kernel on TPU).  Pad slots (INVALID_VID) report not-found."""
+    if use_pallas:
+        from ..kernels import ops as kops  # picks interpret mode off-TPU
+        i = kops.batched_searchsorted(run.vkeys, vs, run.nv)
+    else:
+        i = jnp.searchsorted(run.vkeys, vs).astype(jnp.int32)
+    i_c = jnp.minimum(i, run.vcap - 1)
+    found = (run.vkeys[i_c] == vs) & (vs != INVALID_VID)
+    start = run.voff[i_c]
+    end = run.voff[i_c + 1]
+    return found, jnp.where(found, start, 0), jnp.where(found, end, 0)
+
+
+@jax.jit
+def map_run_to_queries(run: CSRRunArrays, vs: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of run_lookup_batch: per EDGE record, the position of its
+    source vertex in the sorted query vector vs — or B for records of
+    non-queried vertices / pad slots.
+
+    One O(ecap) pass per run replaces per-vertex slice gathers, so the
+    batched read path needs no per-vertex degree cap: ragged adjacency is
+    carried as (qid, record) pairs and resolved by one segmented sort.
+    """
+    B = vs.shape[0]
+    src = _expand_src(run)
+    j = jnp.searchsorted(vs, src).astype(jnp.int32)
+    j_c = jnp.minimum(j, B - 1)
+    hit = (vs[j_c] == src) & (src != INVALID_VID)
+    return jnp.where(hit, j_c, B)
+
+
 @functools.partial(jax.jit, static_argnames=("cap",))
 def run_gather(run: CSRRunArrays, start: jnp.ndarray, end: jnp.ndarray, *, cap: int):
     """Gather up to `cap` edge records from [start, end)."""

@@ -24,6 +24,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..analytics.view import CSRView
@@ -147,11 +148,11 @@ def make_distributed_pagerank(mesh: Mesh, shard: ShardedCSR, *,
 
         return jax.lax.fori_loop(0, iters, body, x_local)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         _one, mesh=mesh,
         in_specs=(spec_sharded,) * 5 + (spec_sharded,),
         out_specs=spec_sharded,
-        check_vma=False,
+        check_rep=False,
     )
 
     def run():
@@ -214,10 +215,10 @@ def make_route_updates(mesh: Mesh, *, v_local: int, n_shards: int,
             src, dst, prop, n_valid[0], v_local=v_local,
             n_shards=n_shards, bucket_cap=bucket_cap, axis=axis)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         _route, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
-        check_vma=False,
+        check_rep=False,
     )
     return jax.jit(mapped)

@@ -115,6 +115,19 @@ def lookup(idx: IndexState, v: jnp.ndarray):
             idx.lvl_fid[v], idx.lvl_off[v])
 
 
+@jax.jit
+def lookup_batch(idx: IndexState, vs: jnp.ndarray):
+    """Multi-level index positions for a whole query vector in 4 gathers:
+    (l0_first[B], l0_min[B], lvl_fid[B, L], lvl_off[B, L]).  This is the
+    batched read path's one-shot index resolution — per-vertex `lookup`
+    dispatches collapse into a single jit'd gather set.  Pad queries
+    (INVALID_VID) clip to the LAST row and return that row's (arbitrary)
+    data; callers MUST mask pad slots out by qid, never rely on them."""
+    v_c = jnp.minimum(vs, idx.l0_first_fid.shape[0] - 1)
+    return (idx.l0_first_fid[v_c], idx.l0_min_fid[v_c],
+            idx.lvl_fid[v_c], idx.lvl_off[v_c])
+
+
 def index_nbytes_dense(vmax: int, n_levels: int) -> int:
     return vmax * (2 + 2 * n_levels) * BYTES_PER_INDEX_ENTRY
 

@@ -300,6 +300,43 @@ def scan_vertex(mg: MemGraphState, v: jnp.ndarray, *, cap: int):
     return dst, ts, marker, prop, mask
 
 
+@jax.jit
+def scan_vertices_batch(mg: MemGraphState, vs: jnp.ndarray):
+    """Batched `scan_vertex`: cached records of a whole query vector at once.
+
+    vs: int32[B], SORTED ascending, padded with INVALID_VID.  Returns flat
+    (qid, dst, ts, marker, prop) arrays of static length B*G + Oc, where
+    qid[i] is the position of record i's vertex in vs, or B for slots that
+    carry no queried record.  One hashmap probe batch + one gather for the
+    segment tier, one searchsorted pass over the overflow tier — constant
+    jit'd ops regardless of B (vs. one scan_vertex dispatch per vertex).
+    """
+    B = vs.shape[0]
+    g = mg.segsize
+    rows = lookup_rows(mg, vs)
+    row_c = jnp.clip(rows, 0, mg.nseg - 1)
+    stored = jnp.where(rows >= 0, jnp.minimum(mg.seg_len[row_c], g), 0)
+    seg_valid = jnp.arange(g, dtype=jnp.int32)[None, :] < stored[:, None]
+    qid_seg = jnp.where(
+        seg_valid, jnp.arange(B, dtype=jnp.int32)[:, None], B)
+    # Overflow tier: map every overflow record to its query slot (if any) by
+    # binary search into the sorted query vector — the inverse direction of
+    # scan_vertex's per-vertex nonzero scan, and cap-free.
+    oi = jnp.searchsorted(vs, mg.ovf_src).astype(jnp.int32)
+    oi_c = jnp.minimum(oi, B - 1)
+    ohit = ((vs[oi_c] == mg.ovf_src)
+            & (mg.ovf_src != INVALID_VID)
+            & (jnp.arange(mg.ovf_cap, dtype=jnp.int32) < mg.ovf_n))
+    qid = jnp.concatenate([qid_seg.reshape(-1),
+                           jnp.where(ohit, oi_c, B)])
+    dst = jnp.concatenate([mg.seg_dst[row_c].reshape(-1), mg.ovf_dst])
+    ts = jnp.concatenate([mg.seg_ts[row_c].reshape(-1), mg.ovf_ts])
+    marker = jnp.concatenate([mg.seg_marker[row_c].reshape(-1),
+                              mg.ovf_marker])
+    prop = jnp.concatenate([mg.seg_prop[row_c].reshape(-1), mg.ovf_prop])
+    return qid, dst, ts, marker, prop
+
+
 def memgraph_should_flush(mg: MemGraphState, cfg: StoreConfig) -> bool:
     """Host-side flush trigger (paper: MemGraph reaches capacity)."""
     return bool(

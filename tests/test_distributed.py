@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 _SCRIPT = r"""
 import jax, numpy as np, jax.numpy as jnp, json
 from repro.core.distributed import (partition_csr, make_distributed_pagerank,

@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (see requirements-dev.txt); property "
+           "tests are skipped rather than breaking suite collection")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import LSMGraph

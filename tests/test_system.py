@@ -7,6 +7,8 @@ from repro.core import LSMGraph
 from repro.data.graphgen import powerlaw_edges, rmat_edges, update_stream
 from conftest import small_store_cfg
 
+pytestmark = pytest.mark.slow
+
 
 def test_end_to_end_ingest_analyze_update_analyze():
     """The paper's full workflow: bulk load -> analyze -> stream updates
