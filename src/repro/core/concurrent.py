@@ -24,8 +24,15 @@ from . import memgraph as mg_mod
 
 
 class ConcurrentLSMGraph:
-    def __init__(self, cfg: StoreConfig, drain_batch: int = 8):
-        self.store = LSMGraph(cfg)
+    def __init__(self, cfg: Optional[StoreConfig] = None,
+                 drain_batch: int = 8, store: Optional[LSMGraph] = None):
+        """Wrap a store with ingest/compactor threads.  Pass ``store`` to
+        wrap a pre-built (e.g. durable, via ``repro.storage.open_store``)
+        instance; otherwise a fresh in-memory store is built from ``cfg``."""
+        if store is None:
+            assert cfg is not None, "need cfg or a pre-built store"
+            store = LSMGraph(cfg)
+        self.store = store
         self.store.on_flush_needed = lambda: self._compact_request.set()
         self._q: "queue.Queue" = queue.Queue(maxsize=256)
         self._stop = threading.Event()
@@ -67,6 +74,7 @@ class ConcurrentLSMGraph:
         self._stop.set()
         self._writer.join(timeout=10)
         self._compactor.join(timeout=60)
+        self.store.close()  # durable: fsync WAL tail + release handles
         self._check()
 
     # --------------------------------------------------------------- threads
@@ -106,6 +114,9 @@ class ConcurrentLSMGraph:
                 # mid-item on a hard-full cache waiting for exactly this.
                 if mg_mod.memgraph_should_flush(store.mem, store.cfg):
                     store.flush_memgraph()  # includes L0 compaction + cascade
+                # Durable stores: WAL group-commit fsync runs on the WAL's
+                # own background thread (wal.py), off the writer's critical
+                # path; close() below issues the final barrier.
             except BaseException as e:
                 import traceback
                 traceback.print_exc()

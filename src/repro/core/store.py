@@ -38,9 +38,12 @@ def _np(x) -> np.ndarray:
 class LSMGraph:
     """Dynamic graph store: LSM-tree level structure over CSR runs."""
 
-    def __init__(self, cfg: StoreConfig):
+    def __init__(self, cfg: StoreConfig, durability=None):
         cfg.validate()
         self.cfg = cfg
+        # Optional durability engine (repro.storage.DurableStorage): WAL /
+        # segment-file / manifest hooks.  None = in-memory store (seed mode).
+        self.durability = durability
         self._lock = threading.RLock()
         self._flush_lock = threading.RLock()   # serializes flush pipelines
         self._compact_lock = threading.RLock()  # serializes compactions
@@ -60,6 +63,8 @@ class LSMGraph:
         self._ts = 0
         self._next_fid = 0
         self._publish()
+        if durability is not None:
+            durability.attach(self)
 
     # ------------------------------------------------------------------ util
     def _publish(self) -> Version:
@@ -120,17 +125,16 @@ class LSMGraph:
             with self._lock:
                 ts = np.arange(self._ts, self._ts + n, dtype=np.int32)
                 self._ts += n
-                batch = EdgeBatch(
-                    src=jnp.asarray(_pad(s, bc)),
-                    dst=jnp.asarray(_pad(d, bc)),
-                    ts=jnp.asarray(_pad(ts, bc)),
-                    prop=jnp.asarray(_pad(p, bc)),
-                    marker=jnp.asarray(_pad(np.full(n, delete), bc)),
-                    n=jnp.asarray(n, jnp.int32),
-                )
-                self.mem, ok = mg_mod.insert_batch(
-                    self.mem, batch, mode=self.cfg.memcache_mode)
-                if not bool(ok):
+                marker = np.full(n, delete, bool)
+                if self.durability is not None:
+                    # WAL-before-MemGraph: the batch is logged before it can
+                    # become readable; fsync is group-committed off-path.
+                    self.durability.on_apply(s, d, ts, marker, p)
+                if not self._insert_batch_locked(s, d, ts, marker, p):
+                    if self.durability is not None:
+                        # Keep WAL == acknowledged state: replay must not
+                        # resurrect a batch whose insert raised.
+                        self.durability.on_apply_abort(int(ts[0]) if n else -1)
                     raise RuntimeError(
                         "MemGraph capacity/hash overflow — raise mem caps")
                 if self.cfg.memcache_mode == "array_only":
@@ -139,6 +143,45 @@ class LSMGraph:
                     self.io.flush_write += n  # nominal movement charge
             if allow_flush and mg_mod.memgraph_should_flush(
                     self.mem, self.cfg):
+                self.flush_memgraph()
+
+    def _insert_batch_locked(self, s, d, t, m, p) -> bool:
+        """Pad one <= batch_cap chunk into an EdgeBatch and insert it into
+        MemGraph.  Caller holds ``self._lock``.  Shared by the live write
+        path (store-assigned ts) and WAL replay (original ts)."""
+        bc = self.cfg.batch_cap
+        batch = EdgeBatch(
+            src=jnp.asarray(_pad(s, bc)),
+            dst=jnp.asarray(_pad(d, bc)),
+            ts=jnp.asarray(_pad(t, bc)),
+            prop=jnp.asarray(_pad(p, bc)),
+            marker=jnp.asarray(_pad(m, bc)),
+            n=jnp.asarray(len(s), jnp.int32),
+        )
+        self.mem, ok = mg_mod.insert_batch(
+            self.mem, batch, mode=self.cfg.memcache_mode)
+        return bool(ok)
+
+    def _ingest_replay(self, src, dst, ts, marker, prop) -> None:
+        """Recovery-only ingest: re-insert WAL records with their ORIGINAL
+        timestamps (no WAL re-append — the records are already on disk).
+        Flushes triggered here follow the normal durable path, advancing the
+        WAL floor as they land."""
+        src = np.asarray(src, np.int32).ravel()
+        dst = np.asarray(dst, np.int32).ravel()
+        ts = np.asarray(ts, np.int32).ravel()
+        marker = np.asarray(marker, bool).ravel()
+        prop = np.asarray(prop, np.float32).ravel()
+        bc = self.cfg.batch_cap
+        for off in range(0, len(src), bc):
+            s, d = src[off:off + bc], dst[off:off + bc]
+            t, m, p = ts[off:off + bc], marker[off:off + bc], prop[off:off + bc]
+            with self._lock:
+                self._ts = max(self._ts, int(t[-1]) + 1)
+                if not self._insert_batch_locked(s, d, t, m, p):
+                    raise RuntimeError(
+                        "MemGraph overflow during WAL replay — raise mem caps")
+            if mg_mod.memgraph_should_flush(self.mem, self.cfg):
                 self.flush_memgraph()
 
     def _mem_hard_full(self) -> bool:
@@ -166,6 +209,10 @@ class LSMGraph:
                 self.mem_id = self._next_mem_id
                 self._next_mem_id += 1
                 self._publish()
+                wal_floor = self._ts  # every record below this ts is in
+                # mem_full or already-flushed runs
+                if self.durability is not None:
+                    self.durability.on_flush_rotate(wal_floor)
             src, dst, ts, marker, prop, n = mg_mod.flush_arrays(self.mem_full)
             cap = csr.quantize_cap(int(n))
             run = csr.build_run_arrays(src, dst, ts, marker, prop, n, vcap=cap)
@@ -182,6 +229,10 @@ class LSMGraph:
                 self.mem_full, self.mem_full_id = None, None
                 self._publish()
                 need_compact = len(self.levels[0]) >= self.cfg.l0_run_limit
+            if self.durability is not None:
+                # Segment write + manifest flush-edit + WAL prune.  On crash
+                # before the manifest edit lands the WAL tail replays mem_full.
+                self.durability.on_flush_commit(rf, wal_floor=wal_floor)
         if need_compact:
             self.compact_l0()
         return rf
@@ -247,7 +298,7 @@ class LSMGraph:
                     l0_max_fid: Optional[int],
                     also_remove: List[RunFile]) -> None:
         # ---- compute phase: no lock, immutable inputs ----
-        all_runs = [r.arrays for r in sources + overlap]
+        all_runs = [r.ensure_loaded() for r in sources + overlap]
         tot_e = sum(r.ne for r in sources + overlap)
         self.io.compaction_read += sum(
             r.nbytes for r in sources + overlap)
@@ -258,6 +309,10 @@ class LSMGraph:
                                 is_bottom=is_bottom)
         new_segs = self._resegment(merged, target_level)
         self.io.compaction_write += sum(r.nbytes for r in new_segs)
+        if self.durability is not None:
+            # Write the merge outputs while no lock is held; they stay
+            # invisible (orphans) until the manifest edit below lands.
+            self.durability.on_compact_segments(new_segs)
         # ---- commit phase: short critical section ----
         self._lock.acquire()
         try:
@@ -268,6 +323,12 @@ class LSMGraph:
                                also_remove=also_remove)
         finally:
             self._lock.release()
+        if self.durability is not None:
+            # One fsync'd manifest record makes the swap crash-atomic; the
+            # replaced segment files are deleted only after it lands.
+            removed = {r.fid: r for r in also_remove + overlap}
+            self.durability.on_compact_commit(
+                [removed[f] for f in sorted(removed)], new_segs, target_level)
 
     def _commit_merge(self, *, sources, overlap, new_segs, merged_nv,
                       target_level, range_lo, range_hi, l0_max_fid,
@@ -384,16 +445,41 @@ class LSMGraph:
     def query_edge(self, u: int, v: int) -> bool:
         snap = self.snapshot()
         try:
-            return int(v) in snap.neighbors(int(u))
+            return bool(snap.query_edges_batch([u], [v])[0])
         finally:
             snap.release()
+
+    def query_edges_batch(self, us, vs) -> np.ndarray:
+        """Batched point-membership: one snapshot, one batched resolve."""
+        snap = self.snapshot()
+        try:
+            return snap.query_edges_batch(us, vs)
+        finally:
+            snap.release()
+
+    # ------------------------------------------------------------ durability
+    def sync(self) -> None:
+        """Durability barrier: fsync the WAL tail (no-op when in-memory)."""
+        if self.durability is not None:
+            self.durability.sync()
+
+    def close(self) -> None:
+        """Flush WAL buffers and release file handles.  The store stays
+        usable for reads but further writes are undefined; reopen via
+        ``repro.storage.open_store``."""
+        if self.durability is not None:
+            self.durability.close()
 
     # ----------------------------------------------------------------- stats
     def level_sizes(self) -> List[int]:
         return [sum(r.ne for r in lvl) for lvl in self.levels]
 
     def disk_bytes(self) -> int:
-        """Space cost of all live runs + index (Fig 14)."""
+        """Space cost (Fig 14).  Durable mode reports ACTUAL on-disk bytes
+        (WAL + segments + manifest); in-memory mode keeps the byte-accounting
+        proxy over live runs + index."""
+        if self.durability is not None:
+            return self.durability.disk_bytes()
         run_bytes = sum(r.nbytes for lvl in self.levels for r in lvl)
         return run_bytes + mlindex.index_nbytes_dense(
             self.cfg.vmax, self.cfg.n_levels)
@@ -445,6 +531,11 @@ class Snapshot:
                 if f in store.runs_by_fid]
             self.level_runs: List[List[RunFile]] = [
                 list(lvl) for lvl in store.levels[1:]]
+        # Evicted (durable, cold) segments stay cold at pin time: every read
+        # path materializes lazily via ensure_loaded, and a run's file can't
+        # vanish under a pin — compaction re-materializes the runs it removes
+        # before unlinking their files (engine.on_compact_commit), so the
+        # pinned RunFile objects keep (or can reload) their arrays.
         self.runs_by_fid = {r.fid: r
                             for lvl in ([self.l0_runs] + self.level_runs)
                             for r in lvl}
@@ -564,7 +655,7 @@ class Snapshot:
                    & ((first_np == INVALID_VID) | (rf.fid >= first_np)))
             if vis[:B].any():
                 recs.append(_run_query_records(
-                    rf.arrays, u_j, jnp.asarray(vis)))
+                    rf.ensure_loaded(), u_j, jnp.asarray(vis)))
         if self.cfg.use_multilevel_index:
             for col, lvl in enumerate(self.level_runs):
                 for rf in lvl:
@@ -573,7 +664,7 @@ class Snapshot:
                     vis = lvl_np[:, col] == rf.fid
                     if vis[:B].any():
                         recs.append(_run_query_records(
-                            rf.arrays, u_j, jnp.asarray(vis)))
+                            rf.ensure_loaded(), u_j, jnp.asarray(vis)))
         else:
             # Ablation: no index — every overlapping segment file is probed
             # (Fig 16 baseline), still one vectorized pass per file.
@@ -582,7 +673,8 @@ class Snapshot:
                 for rf in lvl:
                     if rf.nv == 0 or rf.max_vid < lo_q or rf.min_vid > hi_q:
                         continue
-                    recs.append(_run_query_records(rf.arrays, u_j, all_vis))
+                    recs.append(_run_query_records(
+                        rf.ensure_loaded(), u_j, all_vis))
         if not recs:
             return (np.zeros(B + 1, np.int64), np.empty(0, np.int64),
                     np.empty(0, np.float32))
@@ -664,6 +756,26 @@ class Snapshot:
         self._store.io.analytics_read += bytes_read
         return _annihilate(recs, self.tau, return_props)
 
+    def query_edges_batch(self, us, vs) -> np.ndarray:
+        """Batched edge-membership: bool[i] = (us[i] -> vs[i]) is live at τ.
+
+        Built on the ``neighbors_batch`` offsets (ROADMAP "batched write
+        path symmetry"): one batched resolve of the unique sources, then a
+        vectorized bisection per pair in the already-sorted adjacency slice
+        — no per-edge snapshot round-trips."""
+        us = np.asarray(us, np.int64).ravel()
+        vs = np.asarray(vs, np.int64).ravel()
+        if us.shape != vs.shape:
+            raise ValueError("us and vs must have the same length")
+        if us.size == 0:
+            return np.zeros(0, bool)
+        nbrs = self.neighbors_batch(us)
+        out = np.zeros(len(us), bool)
+        for i, (adj, v) in enumerate(zip(nbrs, vs)):
+            j = int(np.searchsorted(adj, v))
+            out[i] = j < len(adj) and int(adj[j]) == v
+        return out
+
     def degree(self, v: int) -> int:
         return len(self.neighbors(v))
 
@@ -723,7 +835,7 @@ def _annihilate_batch(qid, dst, ts, marker, prop, tau, nq, run_from):
 
 
 def _run_records(rf: RunFile, min_fid_filter: bool):
-    a = rf.arrays
+    a = rf.ensure_loaded()  # concurrent evict: reload, local ref stays valid
     ne = rf.ne
     src = _np(csr._expand_src(a))[:ne]
     return (src, _np(a.dst)[:ne], _np(a.ts)[:ne], _np(a.marker)[:ne],
@@ -731,9 +843,9 @@ def _run_records(rf: RunFile, min_fid_filter: bool):
 
 
 def _gather_vertex(rf: RunFile, v: int, known_off: Optional[int] = None):
-    a = rf.arrays
     if rf.nv == 0:
         return None
+    a = rf.ensure_loaded()  # concurrent evict: reload, local ref stays valid
     if known_off is None:
         found, start, end = csr.run_lookup(a, jnp.asarray(v, jnp.int32))
         if not bool(found):

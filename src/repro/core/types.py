@@ -9,7 +9,8 @@ Design rules (see DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+import threading
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -65,20 +66,60 @@ class CSRRunArrays(NamedTuple):
 
 @dataclasses.dataclass(eq=False)  # identity eq: arrays are not comparable
 class RunFile:
-    """Host wrapper: a CSR run plus the paper's file-header metadata."""
+    """Host wrapper: a CSR run plus the paper's file-header metadata.
+
+    In durable mode ``path``/``loader`` point at the on-disk segment file;
+    ``arrays`` may then be evicted (set to None) and is lazily reloaded via
+    ``ensure_loaded`` — cold L1+ levels need not stay resident in RAM.
+    """
 
     fid: int
     level: int
-    arrays: CSRRunArrays
+    arrays: Optional[CSRRunArrays]
     min_vid: int
     max_vid: int
     created_ts: int
     nv: int
     ne: int
+    path: Optional[str] = None
+    loader: Optional[Callable[[], CSRRunArrays]] = dataclasses.field(
+        default=None, repr=False)
+    # Orders load vs evict vs the compaction-commit re-materialize+unlink:
+    # without it a reader past its None-check could open an already-deleted
+    # segment file.
+    _load_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
 
     @property
     def nbytes(self) -> int:
         return self.ne * (BYTES_PER_EDGE + BYTES_PER_PROP)
+
+    def ensure_loaded(self) -> CSRRunArrays:
+        """Materialize ``arrays`` (no-op when resident).  Returns a local
+        reference, so a concurrent ``evict`` cannot null it between the
+        check and the caller's use."""
+        a = self.arrays
+        if a is not None:
+            return a
+        with self._load_lock:
+            a = self.arrays
+            if a is None:
+                if self.loader is None:
+                    raise RuntimeError(
+                        f"RunFile fid={self.fid} has no arrays and no loader")
+                a = self.loader()
+                self.arrays = a
+        return a
+
+    def evict(self) -> bool:
+        """Drop the in-RAM arrays if a disk copy exists.  Returns True if
+        evicted.  A concurrently pinned snapshot will transparently reload
+        through ``ensure_loaded`` on its next read."""
+        with self._load_lock:
+            if self.arrays is not None and self.loader is not None:
+                self.arrays = None
+                return True
+            return False
 
 
 class MemGraphState(NamedTuple):
@@ -159,19 +200,32 @@ class StoreConfig:
 
 @dataclasses.dataclass
 class IOCounters:
-    """Bytes-moved accounting — the I/O proxy for the paper's disk-I/O plots."""
+    """Bytes-moved accounting — the I/O proxy for the paper's disk-I/O plots.
+
+    ``flush_write``/``compaction_*``/``analytics_read``/``index_write`` are
+    the paper's logical-bytes proxy (counted in every mode); ``wal_write``,
+    ``segment_write`` and ``segment_read`` count *actual* file bytes and
+    advance only when a durable storage engine is attached.
+    """
 
     flush_write: int = 0
     compaction_read: int = 0
     compaction_write: int = 0
     analytics_read: int = 0
     index_write: int = 0
+    wal_write: int = 0        # durable: WAL record bytes appended
+    segment_write: int = 0    # durable: segment file bytes written
+    segment_read: int = 0     # durable: segment file bytes (re)loaded
 
     def total_write(self) -> int:
         return self.flush_write + self.compaction_write + self.index_write
 
     def total(self) -> int:
         return self.total_write() + self.compaction_read + self.analytics_read
+
+    def durable_write(self) -> int:
+        """Actual bytes written to disk (WAL + segment files)."""
+        return self.wal_write + self.segment_write
 
     def snapshot(self) -> "IOCounters":
         return dataclasses.replace(self)
@@ -183,6 +237,9 @@ class IOCounters:
             compaction_write=self.compaction_write - other.compaction_write,
             analytics_read=self.analytics_read - other.analytics_read,
             index_write=self.index_write - other.index_write,
+            wal_write=self.wal_write - other.wal_write,
+            segment_write=self.segment_write - other.segment_write,
+            segment_read=self.segment_read - other.segment_read,
         )
 
 

@@ -32,6 +32,14 @@ def main() -> None:
                          "queries resolved in one neighbors_batch call "
                          "(0 disables)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--durable", default=None, metavar="DIR",
+                    help="run against a durable store rooted at DIR (WAL + "
+                         "segment files + manifest) and finish with a "
+                         "restart-and-verify phase: close, recover, and "
+                         "check the edge set survived")
+    ap.add_argument("--wal-sync", default="batch",
+                    choices=["always", "batch", "off"],
+                    help="WAL fsync policy in --durable mode")
     args = ap.parse_args()
 
     v = args.vertices
@@ -39,7 +47,12 @@ def main() -> None:
                       n_segments=1 << 12, hash_slots=1 << 13,
                       ovf_cap=1 << 13, batch_cap=1 << 10,
                       l0_run_limit=4, seg_target_edges=1 << 13)
-    g = ConcurrentLSMGraph(cfg)
+    if args.durable:
+        from ..storage import open_store
+        g = ConcurrentLSMGraph(
+            store=open_store(args.durable, cfg, wal_sync=args.wal_sync))
+    else:
+        g = ConcurrentLSMGraph(cfg)
     src, dst = powerlaw_edges(v, args.edges, seed=args.seed)
 
     t0 = time.time()
@@ -102,8 +115,28 @@ def main() -> None:
         print(f"batched reads: {args.queries} vertices in {dt*1e3:.1f} ms "
               f"({args.queries/max(dt, 1e-9):.0f} q/s; {hits} non-empty)")
     print(f"io: {g.store.io}")
-    snap.release()
-    g.close()
+    if args.durable:
+        pre = snap.edge_set()
+        disk = g.store.disk_bytes()
+        snap.release()
+        g.close()
+        # Restart-and-verify: recover the directory and check the edge set
+        # survived WAL replay + manifest-driven segment reload.
+        from ..storage import open_store
+        t0 = time.time()
+        g2 = open_store(args.durable)
+        t_rec = time.time() - t0
+        with g2.snapshot() as snap2:
+            post = snap2.edge_set()
+        match = "OK" if post == pre else "MISMATCH"
+        print(f"durable: {disk} bytes on disk; recovered {len(post)} edges "
+              f"in {t_rec:.2f}s after restart: {match}")
+        g2.close()
+        if match != "OK":
+            raise SystemExit("restart-and-verify FAILED")
+    else:
+        snap.release()
+        g.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,248 @@
+"""``DurableStorage``: the durability hook object wired into ``LSMGraph``.
+
+The core store stays free of file I/O; when constructed with a
+``DurableStorage`` it calls these hooks at the three durability points:
+
+  * ``on_apply``          — WAL append *before* the batch enters MemGraph;
+  * ``on_flush_rotate`` / ``on_flush_commit`` — WAL rotation at MemGraph
+    double-buffer swap, then segment write + manifest flush-edit + WAL prune
+    once the L0 run is built;
+  * ``on_compact_segments`` / ``on_compact_commit`` — new segment files are
+    written (fsync'd) during the lock-free compute phase; the manifest
+    compaction edit lands after the in-memory metadata swap, after which the
+    replaced files are deleted.
+
+Crash windows and their recovery outcomes:
+
+  ===============================================  =========================
+  crash between                                    recovery outcome
+  ===============================================  =========================
+  WAL append … segment write                       WAL tail replays the batch
+  segment write … manifest flush edit              orphan segment GC'd; WAL
+                                                   tail replays the batch
+  manifest flush edit … WAL prune                  stale WAL skipped (floor)
+  compaction segment writes … manifest edit        orphans GC'd; old segments
+                                                   stay live
+  manifest compaction edit … old-file delete       dead files GC'd at reopen
+  ===============================================  =========================
+
+``open_store`` is the public entry point: create a fresh durable store or
+recover an existing directory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fcntl
+import os
+from typing import Dict, List, Optional, Set
+
+from ..core.store import LSMGraph
+from ..core.types import RunFile, StoreConfig
+from . import segments as seg_mod
+from .manifest import Manifest
+from .wal import WriteAheadLog
+
+SEGMENT_DIR = "segments"
+WAL_DIR = "wal"
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by test-injected crash points (see ``DurableStorage.crash_at``)."""
+
+
+def _seg_name(fid: int) -> str:
+    return "seg-%08d.csr" % fid
+
+
+class DurableStorage:
+    """Owns the directory, WAL and manifest for one durable ``LSMGraph``."""
+
+    def __init__(self, root: str, *, wal_sync: str = "batch",
+                 wal_sync_interval: float = 0.05, wal_start_seq: int = 0,
+                 wal_last_ts: Optional[Dict[int, int]] = None):
+        self.root = root
+        self.seg_dir = os.path.join(root, SEGMENT_DIR)
+        os.makedirs(self.seg_dir, exist_ok=True)
+        # Exclusive advisory lock (LevelDB-style LOCK file): two writer
+        # PROCESSES interleaving manifest/WAL appends would corrupt the
+        # store.  POSIX record locks (lockf) are per-process, so reopening
+        # after an in-process simulated crash (abandoned handle) still works.
+        self._lock_fd = os.open(os.path.join(root, "LOCK"),
+                                os.O_WRONLY | os.O_CREAT, 0o644)
+        try:
+            fcntl.lockf(self._lock_fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+        except OSError:
+            os.close(self._lock_fd)
+            raise RuntimeError(
+                f"{root} is locked by another process (durable stores are "
+                "single-writer; close the other handle first)") from None
+        self.wal = WriteAheadLog(
+            os.path.join(root, WAL_DIR), sync=wal_sync,
+            sync_interval=wal_sync_interval, start_seq=wal_start_seq,
+            last_ts_by_seq=wal_last_ts)
+        self.manifest = Manifest(root)
+        self.store: Optional[LSMGraph] = None
+        # Test hook: crash point names at which hooks raise SimulatedCrash
+        # ("post_wal_append", "pre_manifest_flush", "pre_manifest_compact").
+        self.crash_at: Set[str] = set()
+        self._closed = False
+
+    def attach(self, store: LSMGraph) -> None:
+        self.store = store
+
+    def _crashpoint(self, name: str) -> None:
+        if name in self.crash_at:
+            self.wal.sync()
+            raise SimulatedCrash(name)
+
+    def seg_path(self, fid: int) -> str:
+        return os.path.join(self.seg_dir, _seg_name(fid))
+
+    def make_loader(self, path: str):
+        def load():
+            meta, run = seg_mod.read_segment(path)
+            if self.store is not None:
+                self.store.io.segment_read += (
+                    os.path.getsize(path) if os.path.exists(path) else 0)
+            return run
+        return load
+
+    def _segdesc(self, rf: RunFile) -> dict:
+        return {"fid": rf.fid, "level": rf.level, "file": _seg_name(rf.fid),
+                "min_vid": rf.min_vid, "max_vid": rf.max_vid,
+                "created_ts": rf.created_ts, "nv": rf.nv, "ne": rf.ne}
+
+    # ------------------------------------------------------------ store hooks
+    def on_apply(self, src, dst, ts, marker, prop) -> None:
+        """WAL-before-MemGraph: called under the store lock, right after ts
+        assignment.  A buffered write; fsync follows the group-commit policy."""
+        n = self.wal.append_edges(src, dst, ts, marker, prop)
+        self.store.io.wal_write += n
+        self._crashpoint("post_wal_append")
+
+    def on_apply_abort(self, ts_start: int) -> None:
+        """The batch just WAL'd failed its MemGraph insert (exception raised
+        to the caller): log an abort so replay doesn't resurrect it."""
+        self.store.io.wal_write += self.wal.append_abort(ts_start)
+
+    def on_flush_rotate(self, boundary_ts: int) -> None:
+        """MemGraph double-buffer swap: records with ts >= boundary_ts go to
+        a fresh WAL file, so the closed file maps 1:1 to the full MemGraph."""
+        self.wal.rotate()
+
+    def on_flush_commit(self, rf: RunFile, wal_floor: int) -> None:
+        """The L0 run is built and published in memory: make it durable."""
+        path = self.seg_path(rf.fid)
+        nbytes = seg_mod.write_segment(path, rf)
+        rf.path = path
+        rf.loader = self.make_loader(path)
+        self.store.io.segment_write += nbytes
+        self._crashpoint("pre_manifest_flush")
+        self.manifest.append({
+            "op": "flush", "tau": wal_floor, "wal_floor": wal_floor,
+            "next_fid": self.store._next_fid, "add": [self._segdesc(rf)],
+        })
+        self.wal.prune(wal_floor)
+
+    def on_compact_segments(self, new_segs: List[RunFile]) -> None:
+        """Write the merge outputs (lock-free compute phase).  Orphaned on
+        crash until the manifest edit lands; recovery GCs them."""
+        for rf in new_segs:
+            path = self.seg_path(rf.fid)
+            nbytes = seg_mod.write_segment(path, rf)
+            rf.path = path
+            rf.loader = self.make_loader(path)
+            self.store.io.segment_write += nbytes
+
+    def on_compact_commit(self, removed_runs: List[RunFile],
+                          new_segs: List[RunFile], target_level: int) -> None:
+        """In-memory metadata swap done: publish the edit, then drop the
+        replaced files (the manifest no longer references them)."""
+        self._crashpoint("pre_manifest_compact")
+        self.manifest.append({
+            "op": "compact", "tau": self.store.tau, "level": target_level,
+            "next_fid": self.store._next_fid,
+            "remove": sorted(rf.fid for rf in removed_runs),
+            "add": [self._segdesc(rf) for rf in new_segs],
+        })
+        for rf in removed_runs:
+            # A pinned snapshot may still hold this RunFile with its arrays
+            # evicted; re-materialize before the file goes away so its lazy
+            # reload can never hit a missing file.
+            if rf.path is not None:
+                rf.ensure_loaded()
+                try:
+                    os.unlink(rf.path)
+                except FileNotFoundError:
+                    pass
+
+    # ------------------------------------------------------------------ misc
+    def sync(self) -> None:
+        """Durability barrier (used by the concurrent wrapper's background
+        thread and ``close``)."""
+        self.wal.sync()
+
+    def disk_bytes(self) -> int:
+        """Actual bytes on disk: manifest + WAL files + segment files."""
+        total = 0
+        for path, _dirs, files in os.walk(self.root):
+            for name in files:
+                try:
+                    total += os.path.getsize(os.path.join(path, name))
+                except OSError:
+                    pass
+        return total
+
+    def evict_cold_segments(self) -> int:
+        """Drop in-RAM arrays of every L1+ segment (reloadable from disk via
+        the lazy loader).  Returns the number of runs evicted."""
+        store = self.store
+        n = 0
+        with store._lock:
+            for lvl in store.levels[1:]:
+                for rf in lvl:
+                    n += bool(rf.evict())
+        return n
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.wal.close()
+        self.manifest.close()
+        try:
+            fcntl.lockf(self._lock_fd, fcntl.LOCK_UN)
+        finally:
+            os.close(self._lock_fd)
+
+
+def open_store(root: str, cfg: Optional[StoreConfig] = None, *,
+               wal_sync: str = "batch", wal_sync_interval: float = 0.05
+               ) -> LSMGraph:
+    """Open (or create) a durable ``LSMGraph`` rooted at ``root``.
+
+    Fresh directory: requires ``cfg``; writes the manifest "open" record.
+    Existing directory: recovers (manifest replay + segment load + WAL tail
+    replay); ``cfg`` may be omitted — it is restored from the manifest."""
+    os.makedirs(root, exist_ok=True)
+    if Manifest.exists(root):
+        # A crash during the very first "open" append leaves an empty/torn
+        # manifest with zero valid records; no write can have happened before
+        # that record landed, so the directory is safely re-creatable.
+        if Manifest.load_state(root).n_records > 0:
+            from .recovery import recover
+            return recover(root, cfg, wal_sync=wal_sync,
+                           wal_sync_interval=wal_sync_interval)
+        # Drop the dead file: appending after a torn line would corrupt the
+        # fresh "open" record too (replay stops at the first bad line).
+        from .manifest import MANIFEST_NAME
+        os.unlink(os.path.join(root, MANIFEST_NAME))
+    if cfg is None:
+        raise ValueError(f"{root}: no usable manifest found and no config "
+                         "given")
+    storage = DurableStorage(root, wal_sync=wal_sync,
+                             wal_sync_interval=wal_sync_interval)
+    storage.manifest.append({
+        "op": "open", "format": 1, "config": dataclasses.asdict(cfg)})
+    store = LSMGraph(cfg, durability=storage)
+    return store

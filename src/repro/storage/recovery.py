@@ -1,0 +1,140 @@
+"""Crash recovery: reopen a durable LSMGraph directory.
+
+Protocol (package docstring has the full spec):
+
+  1. fold the manifest edit-log into the live segment set + τ + WAL floor;
+  2. load live segments (mmap + CRC), GC orphan files from crashed
+     flush/compaction attempts;
+  3. rebuild the multi-level index from segment membership (no reader pins
+     survive a restart, so ``l0_min_fid`` restarts at 0 and every live L0
+     file is readable);
+  4. replay the WAL tail (records with ts >= floor) into a fresh MemGraph
+     with the *original* timestamps — flushes triggered mid-replay follow
+     the normal durable path, advancing the floor as they land;
+  5. resume τ and fid allocation past everything seen.
+
+The reopened store's ``edge_set()`` equals the pre-crash snapshot.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import index as mlindex
+from ..core.store import LSMGraph
+from ..core.types import RunFile, StoreConfig
+from . import segments as seg_mod
+from .engine import SEGMENT_DIR, WAL_DIR, DurableStorage
+from .manifest import Manifest
+from .wal import scan_wal_dir
+
+
+def recover(root: str, cfg: Optional[StoreConfig] = None, *,
+            wal_sync: str = "batch", wal_sync_interval: float = 0.05
+            ) -> LSMGraph:
+    """Reopen ``root``; returns a durable ``LSMGraph`` with the pre-crash
+    state restored."""
+    st = Manifest.load_state(root)
+    if st.config is None:
+        raise ValueError(f"{root}: manifest has no open record")
+    if cfg is None:
+        cfg = StoreConfig(**st.config)
+    else:
+        for key in ("vmax", "n_levels"):
+            if st.config.get(key) != getattr(cfg, key):
+                raise ValueError(
+                    f"{root}: config mismatch on {key}: "
+                    f"stored {st.config.get(key)} != given {getattr(cfg, key)}")
+
+    # -- WAL scan first: records are held in memory so replay survives the
+    #    rotations/prunes that replay-triggered flushes perform.
+    wal_records, wal_last_ts, wal_max_seq = scan_wal_dir(
+        os.path.join(root, WAL_DIR))
+
+    storage = DurableStorage(
+        root, wal_sync=wal_sync, wal_sync_interval=wal_sync_interval,
+        wal_start_seq=wal_max_seq + 1, wal_last_ts=wal_last_ts)
+    store = LSMGraph(cfg, durability=None)  # build empty, then restore state
+
+    # -- load live segments; GC orphans (crashed publish attempts).
+    live_files = {desc["file"] for desc in st.segments.values()}
+    seg_dir = os.path.join(root, SEGMENT_DIR)
+    for name in os.listdir(seg_dir):
+        if name not in live_files:
+            try:
+                os.unlink(os.path.join(seg_dir, name))
+            except OSError:
+                pass
+    for fid in sorted(st.segments):
+        desc = st.segments[fid]
+        path = os.path.join(seg_dir, desc["file"])
+        meta, run = seg_mod.read_segment(path)
+        store.io.segment_read += os.path.getsize(path)
+        for key in ("fid", "level", "min_vid", "max_vid", "nv", "ne"):
+            if meta[key] != desc[key]:
+                raise ValueError(
+                    f"{path}: header {key}={meta[key]} disagrees with "
+                    f"manifest {desc[key]}")
+        rf = RunFile(
+            fid=fid, level=desc["level"], arrays=run,
+            min_vid=desc["min_vid"], max_vid=desc["max_vid"],
+            created_ts=desc["created_ts"], nv=desc["nv"], ne=desc["ne"],
+            path=path, loader=storage.make_loader(path))
+        store.levels[rf.level].append(rf)
+        store.runs_by_fid[fid] = rf
+    for lvl in range(cfg.n_levels):
+        store.levels[lvl].sort(
+            key=(lambda r: r.fid) if lvl == 0 else (lambda r: r.min_vid))
+
+    # -- rebuild the multi-level index from membership.
+    idx = mlindex.empty_index(cfg.vmax, cfg.n_levels)
+    for rf in store.levels[0]:
+        idx = mlindex.note_l0_flush(
+            idx, rf.arrays.vkeys, rf.arrays.nv,
+            jnp.asarray(rf.fid, jnp.int32))
+    for lvl in range(1, cfg.n_levels):
+        for rf in store.levels[lvl]:
+            idx = mlindex.note_compaction(
+                idx, level=lvl,
+                new_vkeys=rf.arrays.vkeys, new_voff=rf.arrays.voff,
+                new_nv=rf.arrays.nv, new_fid=jnp.asarray(rf.fid, jnp.int32),
+                range_lo=jnp.asarray(rf.min_vid, jnp.int32),
+                range_hi=jnp.asarray(rf.max_vid + 1, jnp.int32),
+                l0_min_fid_update=jnp.asarray(-1, jnp.int32))
+    store.index = idx
+    # Resume τ at the DURABLE floor, not past it: every segment record has
+    # ts < wal_floor (a flush persists exactly the records below its
+    # rotation boundary), and the WAL tail replays with original ts — so
+    # τ tracks "last replayed + 1" through replay.  Inflating τ here (e.g.
+    # to a segment's wrap-time created_ts) would poison the wal_floor of a
+    # replay-triggered flush with a value ABOVE still-unreplayed records,
+    # and a second crash mid-replay would then drop them at the next
+    # recovery's `ts >= floor` filter.
+    store._ts = st.wal_floor
+    store._next_fid = max(
+        st.next_fid, max(st.segments, default=-1) + 1)
+    store._publish()
+
+    # -- attach durability BEFORE replay: replay-triggered flushes must run
+    #    the normal durable path (segment write + manifest edit + prune).
+    store.durability = storage
+    storage.attach(store)
+
+    # -- replay the WAL tail with original timestamps.
+    floor = st.wal_floor
+    for (_seq, src, dst, ts, marker, prop) in wal_records:
+        keep = np.asarray(ts) >= floor
+        if not keep.any():
+            continue
+        store._ingest_replay(np.asarray(src)[keep], np.asarray(dst)[keep],
+                             np.asarray(ts)[keep],
+                             np.asarray(marker)[keep],
+                             np.asarray(prop)[keep])
+    store._publish()
+    return store
+
+
+__all__ = ["recover"]

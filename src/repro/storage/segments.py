@@ -1,0 +1,130 @@
+"""Immutable on-disk CSR segment files (paper Fig. 6 layout).
+
+A segment serializes one ``CSRRunArrays`` + its ``RunFile`` header metadata:
+a fixed 64-byte header, a topology section (vkeys/voff/dst/ts/marker) and a
+property section (prop) — the paper's CSR file + property file packed into
+one file so ``os.replace`` publishes both atomically.  Only valid prefixes
+are stored; load re-pads to quantized capacities, so a round trip is exact
+on the valid region.  See the package docstring for the byte-level spec.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import csr
+from ..core.types import CSRRunArrays, RunFile
+from .fsutil import fsync_dir as _fsync_dir
+
+MAGIC = b"LSMGSEG1"
+FORMAT_VERSION = 1
+_HDR = struct.Struct("<8sIIIiqqqqII")  # 64 bytes
+assert _HDR.size == 64
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(x)
+
+
+def write_segment(path: str, rf: RunFile) -> int:
+    """Serialize ``rf`` to ``path`` (tmp file + fsync + atomic replace +
+    dir fsync).  Returns bytes written."""
+    a = rf.arrays
+    nv, ne = rf.nv, rf.ne
+    body = b"".join((
+        _np(a.vkeys[:nv]).astype("<i4").tobytes(),
+        _np(a.voff[:nv + 1]).astype("<i4").tobytes(),
+        _np(a.dst[:ne]).astype("<i4").tobytes(),
+        _np(a.ts[:ne]).astype("<i4").tobytes(),
+        _np(a.marker[:ne]).astype("<u1").tobytes(),
+        _np(a.prop[:ne]).astype("<f4").tobytes(),
+    ))
+    hdr = _pack_header(rf, zlib.crc32(body))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(hdr)
+        f.write(body)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path))
+    return len(hdr) + len(body)
+
+
+def _pack_header(rf: RunFile, body_crc: int) -> bytes:
+    raw = _HDR.pack(MAGIC, FORMAT_VERSION, 0, body_crc, rf.level, rf.fid,
+                    rf.min_vid, rf.max_vid, rf.created_ts, rf.nv, rf.ne)
+    hcrc = zlib.crc32(raw)
+    return _HDR.pack(MAGIC, FORMAT_VERSION, hcrc, body_crc, rf.level, rf.fid,
+                     rf.min_vid, rf.max_vid, rf.created_ts, rf.nv, rf.ne)
+
+
+def read_segment_header(path: str) -> dict:
+    """Parse + CRC-check the 64-byte header only (cheap metadata peek)."""
+    with open(path, "rb") as f:
+        raw = f.read(_HDR.size)
+    if len(raw) != _HDR.size:
+        raise ValueError(f"segment {path}: truncated header")
+    (magic, ver, hcrc, body_crc, level, fid, min_vid, max_vid,
+     created_ts, nv, ne) = _HDR.unpack(raw)
+    if magic != MAGIC:
+        raise ValueError(f"segment {path}: bad magic")
+    if ver != FORMAT_VERSION:
+        raise ValueError(f"segment {path}: unsupported version {ver}")
+    zeroed = _HDR.pack(magic, ver, 0, body_crc, level, fid, min_vid,
+                       max_vid, created_ts, nv, ne)
+    if zlib.crc32(zeroed) != hcrc:
+        raise ValueError(f"segment {path}: header CRC mismatch")
+    return dict(fid=fid, level=level, min_vid=min_vid, max_vid=max_vid,
+                created_ts=created_ts, nv=nv, ne=ne, body_crc=body_crc)
+
+
+def read_segment(path: str, *, verify: bool = True
+                 ) -> Tuple[dict, CSRRunArrays]:
+    """Load a segment: (header meta, CSRRunArrays at quantized capacities).
+
+    The body is mmap'd (``np.memmap``) so cold loads stream through the OS
+    page cache; arrays are copied onto the device on conversion."""
+    meta = read_segment_header(path)
+    nv, ne = meta["nv"], meta["ne"]
+    mm = np.memmap(path, dtype=np.uint8, mode="r", offset=_HDR.size)
+    need = 4 * (nv + (nv + 1) + ne + ne) + ne + 4 * ne
+    if mm.shape[0] < need:
+        raise ValueError(f"segment {path}: truncated body")
+    if verify and zlib.crc32(mm[:need].tobytes()) != meta["body_crc"]:
+        raise ValueError(f"segment {path}: body CRC mismatch")
+    off = 0
+
+    def take(dtype, count):
+        nonlocal off
+        nbytes = np.dtype(dtype).itemsize * count
+        arr = np.frombuffer(mm[off:off + nbytes], dtype=dtype)
+        off += nbytes
+        return arr
+
+    vkeys = take("<i4", nv)
+    voff = take("<i4", nv + 1)
+    dst = take("<i4", ne)
+    ts = take("<i4", ne)
+    marker = take("<u1", ne).astype(bool)
+    prop = take("<f4", ne)
+    vcap = csr.quantize_cap(max(nv, 1))
+    ecap = csr.quantize_cap(max(ne, 1))
+    run = CSRRunArrays(
+        vkeys=jnp.asarray(vkeys, jnp.int32),
+        voff=jnp.asarray(voff, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        ts=jnp.asarray(ts, jnp.int32),
+        marker=jnp.asarray(marker, bool),
+        prop=jnp.asarray(prop, jnp.float32),
+        nv=jnp.asarray(nv, jnp.int32),
+        ne=jnp.asarray(ne, jnp.int32),
+    )
+    return meta, csr.repad_run(run, vcap, ecap)
+
+
