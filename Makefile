@@ -1,13 +1,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 test bench
+.PHONY: tier1 tier1-shard test bench
 
 # Fast verification gate: everything except the `slow`-marked end-to-end
 # tests (test_distributed.py spawns an 8-device subprocess mesh,
 # test_system.py runs full ingest->analyze->update sweeps).
 tier1:
 	$(PY) -m pytest -x -q -m "not slow"
+
+# Quick-iteration gate for the sharded service + storage engine work:
+# just the shard and durability suites.
+tier1-shard:
+	$(PY) -m pytest -x -q -m "not slow" tests/test_shard.py tests/test_storage.py
 
 # Full sweep — the canonical tier-1 command from ROADMAP.md.
 test:

@@ -13,7 +13,8 @@ import traceback
 def main() -> None:
     from . import (bench_analytics, bench_durability, bench_index,
                    bench_kernels, bench_memcache, bench_mixed,
-                   bench_read_batch, bench_space, bench_update)
+                   bench_read_batch, bench_sharded, bench_space,
+                   bench_update)
     suites = [
         ("fig10/11 updates", bench_update.main),
         ("fig12/13 analytics", bench_analytics.main),
@@ -24,6 +25,7 @@ def main() -> None:
         ("kernels", bench_kernels.main),
         ("batched reads", bench_read_batch.main),
         ("durability", bench_durability.main),
+        ("sharded scaling", bench_sharded.main),
     ]
     print("name,us_per_call,derived")
     failures = 0

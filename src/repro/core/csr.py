@@ -269,9 +269,16 @@ def repad_run(run: CSRRunArrays, vcap: int, ecap: int) -> CSRRunArrays:
     )
 
 
-def quantize_cap(n: int, minimum: int = 256) -> int:
-    """Round up to a power-of-two bucket — bounds recompilation count."""
+def quantize_cap(n: int, minimum: int = 256, half_steps: bool = False) -> int:
+    """Round up to a power-of-two bucket — bounds recompilation count.
+
+    ``half_steps`` also allows 1.5x-power-of-two buckets (overshoot capped
+    at +50 % instead of +100 %, for ~1 extra compile per size decade) —
+    used where the padded length feeds work linear in it, e.g. the batched
+    read path's annihilation lexsort."""
     c = minimum
     while c < n:
+        if half_steps and (c * 3) // 2 >= n:
+            return (c * 3) // 2
         c <<= 1
     return c

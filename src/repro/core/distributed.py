@@ -167,13 +167,12 @@ def make_distributed_pagerank(mesh: Mesh, shard: ShardedCSR, *,
 # Update routing: the distributed ingest path.
 # ---------------------------------------------------------------------------
 
-def route_updates_local(src, dst, prop, n_valid, *, v_local: int,
-                        n_shards: int, bucket_cap: int, axis: str = "data"):
-    """Inside shard_map: route this shard's pending updates to owner shards.
-
-    Returns (src, dst, prop, valid) of received updates, padded to
-    n_shards * bucket_cap.  Owner = src // v_local (range partition).
-    """
+def _bucket_exchange(src, channels, fills, n_valid, *, v_local: int,
+                     n_shards: int, bucket_cap: int, axis: str):
+    """Shared bucketed-``all_to_all`` core: owner = src // v_local (range
+    partition), stable bucket layout (sort by owner, rank within bucket),
+    one exchange per channel.  Returns (routed_src, routed_channels, valid,
+    dropped) — every output padded to ``n_shards * bucket_cap``."""
     bc = src.shape[0]
     pos = jnp.arange(bc, dtype=jnp.int32)
     valid = pos < n_valid
@@ -191,18 +190,45 @@ def route_updates_local(src, dst, prop, n_valid, *, v_local: int,
         buf = jnp.full((n_shards * bucket_cap,), fill, x.dtype)
         return buf.at[slot].set(x[order], mode="drop")
 
-    b_src = scatter(src, -1)
-    b_dst = scatter(dst, -1)
-    b_prop = scatter(prop, 0.0)
-    b_valid = b_src >= 0
     # all_to_all: dimension 0 split into n_shards chunks, exchanged.
     def a2a(x):
         x = x.reshape(n_shards, bucket_cap)
         return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
                                   tiled=False).reshape(-1)
 
-    return (a2a(b_src), a2a(b_dst), a2a(b_prop),
-            a2a(b_valid.astype(jnp.int32)), dropped[None].astype(jnp.int32))
+    b_src = scatter(src, -1)
+    routed = tuple(a2a(scatter(x, f)) for x, f in zip(channels, fills))
+    b_valid = (b_src >= 0).astype(jnp.int32)
+    return a2a(b_src), routed, a2a(b_valid), dropped
+
+
+def route_updates_local(src, dst, prop, n_valid, *, v_local: int,
+                        n_shards: int, bucket_cap: int, axis: str = "data"):
+    """Inside shard_map: route this shard's pending updates to owner shards.
+
+    Returns (src, dst, prop, valid) of received updates, padded to
+    n_shards * bucket_cap.  Owner = src // v_local (range partition).
+    """
+    r_src, (r_dst, r_prop), r_valid, dropped = _bucket_exchange(
+        src, (dst, prop), (-1, 0.0), n_valid, v_local=v_local,
+        n_shards=n_shards, bucket_cap=bucket_cap, axis=axis)
+    return r_src, r_dst, r_prop, r_valid, dropped[None].astype(jnp.int32)
+
+
+def route_edge_batches_local(src, dst, prop, marker, n_valid, *,
+                             v_local: int, n_shards: int, bucket_cap: int,
+                             axis: str = "data"):
+    """Route full ``EdgeBatch`` payloads (insert AND tombstone records) to
+    owner shards — the sharded graph service's write dispatch.  Identical
+    bucket/`all_to_all` shape to ``route_updates_local`` plus a marker
+    channel (int32 0/1: tombstones must reach the same owner shard as the
+    inserts they annihilate).  Returns (src, dst, prop, marker, valid,
+    dropped)."""
+    r_src, (r_dst, r_prop, r_marker), r_valid, dropped = _bucket_exchange(
+        src, (dst, prop, marker.astype(jnp.int32)), (-1, 0.0, 0), n_valid,
+        v_local=v_local, n_shards=n_shards, bucket_cap=bucket_cap, axis=axis)
+    return (r_src, r_dst, r_prop, r_marker, r_valid,
+            dropped[None].astype(jnp.int32))
 
 
 def make_route_updates(mesh: Mesh, *, v_local: int, n_shards: int,
@@ -219,6 +245,25 @@ def make_route_updates(mesh: Mesh, *, v_local: int, n_shards: int,
         _route, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+        check_rep=False,
+    )
+    return jax.jit(mapped)
+
+
+def make_route_edge_batches(mesh: Mesh, *, v_local: int, n_shards: int,
+                            bucket_cap: int, axis: str = "data"):
+    """jit'd distributed ``EdgeBatch`` router over ``mesh`` (the sharded
+    service's write tier; marker channel included)."""
+
+    def _route(src, dst, prop, marker, n_valid):
+        return route_edge_batches_local(
+            src, dst, prop, marker, n_valid[0], v_local=v_local,
+            n_shards=n_shards, bucket_cap=bucket_cap, axis=axis)
+
+    mapped = shard_map(
+        _route, mesh=mesh,
+        in_specs=(P(axis),) * 5,
+        out_specs=(P(axis),) * 6,
         check_rep=False,
     )
     return jax.jit(mapped)

@@ -86,20 +86,23 @@ class LSMGraph:
         return int(self.mem.ne)
 
     # ----------------------------------------------------------------- write
-    def insert_edges(self, src, dst, prop=None) -> None:
-        self._apply(src, dst, prop, delete=False)
+    def insert_edges(self, src, dst, prop=None) -> Optional[int]:
+        """Insert a batch.  Durable stores return the WAL commit seq of the
+        last appended record (awaitable via ``ack``); in-memory: None."""
+        return self._apply(src, dst, prop, delete=False)
 
-    def delete_edges(self, src, dst) -> None:
-        """Deletion = tombstone record (annihilates at read & compaction)."""
-        self._apply(src, dst, None, delete=True)
+    def delete_edges(self, src, dst) -> Optional[int]:
+        """Deletion = tombstone record (annihilates at read & compaction).
+        Returns the WAL commit seq like ``insert_edges``."""
+        return self._apply(src, dst, None, delete=True)
 
-    def _apply_no_flush(self, src, dst, prop, *, delete: bool) -> None:
+    def _apply_no_flush(self, src, dst, prop, *, delete: bool) -> Optional[int]:
         """Ingest without the inline flush trigger — the concurrent wrapper's
         background compactor owns flush/compaction."""
-        self._apply(src, dst, prop, delete=delete, allow_flush=False)
+        return self._apply(src, dst, prop, delete=delete, allow_flush=False)
 
     def _apply(self, src, dst, prop, *, delete: bool,
-               allow_flush: bool = True) -> None:
+               allow_flush: bool = True) -> Optional[int]:
         src = np.asarray(src, np.int32).ravel()
         dst = np.asarray(dst, np.int32).ravel()
         if prop is None:
@@ -107,6 +110,7 @@ class LSMGraph:
         else:
             prop = np.asarray(prop, np.float32).ravel()
         bc = self.cfg.batch_cap
+        commit_seq: Optional[int] = None
         for off in range(0, len(src), bc):
             s, d, p = src[off:off + bc], dst[off:off + bc], prop[off:off + bc]
             n = len(s)
@@ -129,7 +133,7 @@ class LSMGraph:
                 if self.durability is not None:
                     # WAL-before-MemGraph: the batch is logged before it can
                     # become readable; fsync is group-committed off-path.
-                    self.durability.on_apply(s, d, ts, marker, p)
+                    commit_seq = self.durability.on_apply(s, d, ts, marker, p)
                 if not self._insert_batch_locked(s, d, ts, marker, p):
                     if self.durability is not None:
                         # Keep WAL == acknowledged state: replay must not
@@ -144,6 +148,7 @@ class LSMGraph:
             if allow_flush and mg_mod.memgraph_should_flush(
                     self.mem, self.cfg):
                 self.flush_memgraph()
+        return commit_seq
 
     def _insert_batch_locked(self, s, d, t, m, p) -> bool:
         """Pad one <= batch_cap chunk into an EdgeBatch and insert it into
@@ -314,21 +319,29 @@ class LSMGraph:
             # invisible (orphans) until the manifest edit below lands.
             self.durability.on_compact_segments(new_segs)
         # ---- commit phase: short critical section ----
-        self._lock.acquire()
-        try:
-            self._commit_merge(sources=sources, overlap=overlap,
-                               new_segs=new_segs, merged_nv=int(merged.nv),
-                               target_level=target_level, range_lo=range_lo,
-                               range_hi=range_hi, l0_max_fid=l0_max_fid,
-                               also_remove=also_remove)
-        finally:
-            self._lock.release()
-        if self.durability is not None:
-            # One fsync'd manifest record makes the swap crash-atomic; the
-            # replaced segment files are deleted only after it lands.
-            removed = {r.fid: r for r in also_remove + overlap}
-            self.durability.on_compact_commit(
-                [removed[f] for f in sorted(removed)], new_segs, target_level)
+        # _flush_lock orders this commit (and its manifest 'compact' edit +
+        # old-file unlinks) against a concurrent flush pipeline: a compacted
+        # L0 run's manifest 'flush' ADD must land before this edit REMOVES
+        # it, or a crash could recover a manifest naming an unlinked file /
+        # resurrecting merged records.  Lock order is _compact -> _flush ->
+        # _lock everywhere (flush_memgraph releases _flush_lock before it
+        # calls compact_l0), so this cannot deadlock.
+        with self._flush_lock:
+            with self._lock:
+                self._commit_merge(sources=sources, overlap=overlap,
+                                   new_segs=new_segs,
+                                   merged_nv=int(merged.nv),
+                                   target_level=target_level,
+                                   range_lo=range_lo, range_hi=range_hi,
+                                   l0_max_fid=l0_max_fid,
+                                   also_remove=also_remove)
+            if self.durability is not None:
+                # One fsync'd manifest record makes the swap crash-atomic;
+                # the replaced files are deleted only after it lands.
+                removed = {r.fid: r for r in also_remove + overlap}
+                self.durability.on_compact_commit(
+                    [removed[f] for f in sorted(removed)], new_segs,
+                    target_level)
 
     def _commit_merge(self, *, sources, overlap, new_segs, merged_nv,
                       target_level, range_lo, range_hi, l0_max_fid,
@@ -463,6 +476,14 @@ class LSMGraph:
         if self.durability is not None:
             self.durability.sync()
 
+    def ack(self, commit_seq: Optional[int]) -> None:
+        """Await durability of ONE write batch: blocks until the WAL record
+        with ``commit_seq`` (returned by ``insert_edges``/``delete_edges``)
+        is fsynced — a per-batch ack instead of the global ``sync()``
+        barrier.  No-op for in-memory stores or a ``None`` seq."""
+        if commit_seq is not None and self.durability is not None:
+            self.durability.sync_upto(commit_seq)
+
     def close(self) -> None:
         """Flush WAL buffers and release file handles.  The store stays
         usable for reads but further writes are undefined; reopen via
@@ -483,6 +504,22 @@ class LSMGraph:
         run_bytes = sum(r.nbytes for lvl in self.levels for r in lvl)
         return run_bytes + mlindex.index_nbytes_dense(
             self.cfg.vmax, self.cfg.n_levels)
+
+
+def slice_adjacency(offs: np.ndarray, dst: np.ndarray, prop: np.ndarray,
+                    inv: np.ndarray, return_props: bool) -> list:
+    """Expand a resolved (offsets, dst, prop) adjacency block into the
+    per-query result list: element j is the slice for unique vertex
+    ``inv[j]``.  Shared by ``Snapshot.neighbors_batch`` and the sharded
+    read tier's cross-shard reassembly."""
+    out = []
+    for i in inv:
+        lo, hi = int(offs[i]), int(offs[i + 1])
+        if return_props:
+            out.append((dst[lo:hi], prop[lo:hi]))
+        else:
+            out.append(dst[lo:hi])
+    return out
 
 
 def _pad(a: np.ndarray, n: int) -> np.ndarray:
@@ -603,14 +640,7 @@ class Snapshot:
                                         return_props=return_props)
             return [one] * len(vs)
         offs, dst, prop = self._resolve_batch_chunked(uniq)
-        out = []
-        for i in inv:
-            lo, hi = int(offs[i]), int(offs[i + 1])
-            if return_props:
-                out.append((dst[lo:hi], prop[lo:hi]))
-            else:
-                out.append(dst[lo:hi])
-        return out
+        return slice_adjacency(offs, dst, prop, inv, return_props)
 
     # Bound on unique vertices per device resolve: caps the (chunk, seg_size)
     # MemGraph gather and the final sort buffer, so edge_set()-style whole-
@@ -641,6 +671,11 @@ class Snapshot:
         u_j = jnp.asarray(u_pad, jnp.int32)
         recs: List[Tuple] = []
         for mg in self.mem_states:
+            if int(mg.ne) == 0:
+                # An empty tier would still contribute B*G + ovf_cap pad
+                # records to the final segmented sort (scan_vertices_batch
+                # is capacity-shaped, not content-shaped) — skip it.
+                continue
             recs.append(mg_mod.scan_vertices_batch(mg, u_j))
         n_mem = sum(int(r[0].shape[0]) for r in recs)
         # Vectorized multi-level-index lookup: all queried vertices at once.
@@ -684,7 +719,9 @@ class Snapshot:
         mkc = jnp.concatenate([r[3] for r in recs])
         prc = jnp.concatenate([r[4] for r in recs])
         total = int(qid.shape[0])
-        cap = csr.quantize_cap(total)
+        # Half-step buckets: the concat feeds the lexsort, the read path's
+        # dominant (pad-length-linear) cost.
+        cap = csr.quantize_cap(total, half_steps=True)
         if cap != total:
             pad = cap - total
             qid = jnp.concatenate(
@@ -714,6 +751,8 @@ class Snapshot:
         recs: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
         cap = self.cfg.seg_size + self.cfg.ovf_cap  # max cacheable degree
         for mg in self.mem_states:
+            if int(mg.ne) == 0:
+                continue  # no records; skip the capacity-shaped scan
             d, t, m, p, mask = mg_mod.scan_vertex(
                 mg, jnp.asarray(v, jnp.int32), cap=cap)
             mask = _np(mask)

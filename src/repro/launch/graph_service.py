@@ -32,6 +32,14 @@ def main() -> None:
                          "queries resolved in one neighbors_batch call "
                          "(0 disables)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="run the sharded service tier: N vertex-range "
+                         "LSMGraph shards behind routed writes and "
+                         "gathered batched reads (0 = single store). "
+                         "Composes with --durable (per-shard WALs, "
+                         "per-batch acks) and --queries/2hop phases; "
+                         "CSR-materializing analytics need the single "
+                         "store")
     ap.add_argument("--durable", default=None, metavar="DIR",
                     help="run against a durable store rooted at DIR (WAL + "
                          "segment files + manifest) and finish with a "
@@ -47,6 +55,9 @@ def main() -> None:
                       n_segments=1 << 12, hash_slots=1 << 13,
                       ovf_cap=1 << 13, batch_cap=1 << 10,
                       l0_run_limit=4, seg_target_edges=1 << 13)
+    if args.shards > 0:
+        _run_sharded(args, cfg)
+        return
     if args.durable:
         from ..storage import open_store
         g = ConcurrentLSMGraph(
@@ -55,16 +66,7 @@ def main() -> None:
         g = ConcurrentLSMGraph(cfg)
     src, dst = powerlaw_edges(v, args.edges, seed=args.seed)
 
-    t0 = time.time()
-    n_ops = 0
-    for op, s, d in update_stream(src, dst):
-        if op == "insert":
-            g.insert_edges(np.r_[s, d], np.r_[d, s])  # undirected
-        else:
-            g.delete_edges(np.r_[s, d], np.r_[d, s])
-        n_ops += 2 * len(s)
-    g.flush()
-    t_ingest = time.time() - t0
+    n_ops, _, t_ingest = _ingest_stream(g, src, dst, g.flush)
     print(f"ingested {n_ops} ops in {t_ingest:.2f}s "
           f"({n_ops/t_ingest:.0f} ops/s); levels={g.store.level_sizes()}")
 
@@ -74,16 +76,7 @@ def main() -> None:
         res = multilevel_pagerank(multilevel_views(snap), n_out=v, iters=10)
         top = np.argsort(-np.asarray(res))[:5]
     elif args.analytics == "2hop":
-        # Service-style traversal: one batched resolve per hop instead of a
-        # per-vertex dispatch loop (the batched read subsystem's fast path).
-        rng = np.random.default_rng(args.seed)
-        seeds = rng.integers(0, v, 64).astype(np.int64)
-        hop1 = snap.neighbors_batch(seeds)
-        frontier = (np.unique(np.concatenate(hop1))
-                    if any(len(h) for h in hop1) else np.empty(0, np.int64))
-        hop2 = snap.neighbors_batch(frontier)
-        reach = sum(len(h) for h in hop2)
-        top = np.asarray([len(seeds), len(frontier), reach])
+        top = _two_hop(snap, v, args.seed)
     else:
         view = materialize_csr(snap, v)
         if args.analytics == "pagerank":
@@ -102,38 +95,136 @@ def main() -> None:
             deg, _ = scan_stats(view)
             top = np.argsort(-np.asarray(deg))[:5]
     print(f"{args.analytics} in {time.time()-t0:.2f}s; top: {top}")
-    if args.queries > 0:
-        # Point-read service phase: the whole query batch resolves in a
-        # constant number of jit'd ops per visible run.
-        rng = np.random.default_rng(args.seed + 1)
-        qs = rng.integers(0, v, args.queries).astype(np.int64)
-        snap.neighbors_batch(qs)  # warm the jit caches at the timed shape
-        t0 = time.time()
-        nbrs = snap.neighbors_batch(qs)
-        dt = time.time() - t0
-        hits = sum(len(x) > 0 for x in nbrs)
-        print(f"batched reads: {args.queries} vertices in {dt*1e3:.1f} ms "
-              f"({args.queries/max(dt, 1e-9):.0f} q/s; {hits} non-empty)")
+    _query_phase(snap, v, args, label="batched reads")
     print(f"io: {g.store.io}")
     if args.durable:
-        pre = snap.edge_set()
-        disk = g.store.disk_bytes()
-        snap.release()
-        g.close()
         # Restart-and-verify: recover the directory and check the edge set
         # survived WAL replay + manifest-driven segment reload.
         from ..storage import open_store
+        _restart_verify(snap, g, disk=g.store.disk_bytes(),
+                        reopen=lambda: open_store(args.durable),
+                        where="on disk")
+    else:
+        snap.release()
+        g.close()
+
+
+# --------------------------------------------------------- shared phases
+def _ingest_stream(g, src, dst, flush):
+    """Shared ingest loop (undirected doubling).  Returns (n_ops, last
+    write receipt/seq, seconds incl. the final flush)."""
+    t0 = time.time()
+    n_ops = 0
+    last = None
+    for op, s, d in update_stream(src, dst):
+        if op == "insert":
+            last = g.insert_edges(np.r_[s, d], np.r_[d, s])  # undirected
+        else:
+            last = g.delete_edges(np.r_[s, d], np.r_[d, s])
+        n_ops += 2 * len(s)
+    flush()
+    return n_ops, last, time.time() - t0
+
+
+def _two_hop(snap, v: int, seed: int) -> np.ndarray:
+    """Service-style traversal: one batched resolve per hop instead of a
+    per-vertex dispatch loop (the batched read subsystem's fast path)."""
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(0, v, 64).astype(np.int64)
+    hop1 = snap.neighbors_batch(seeds)
+    frontier = (np.unique(np.concatenate(hop1))
+                if any(len(h) for h in hop1) else np.empty(0, np.int64))
+    hop2 = snap.neighbors_batch(frontier)
+    reach = sum(len(h) for h in hop2)
+    return np.asarray([len(seeds), len(frontier), reach])
+
+
+def _query_phase(snap, v: int, args, label: str) -> None:
+    """Timed batched point-read phase: the whole query batch resolves in a
+    constant number of jit'd ops per visible run."""
+    if args.queries <= 0:
+        return
+    rng = np.random.default_rng(args.seed + 1)
+    qs = rng.integers(0, v, args.queries).astype(np.int64)
+    snap.neighbors_batch(qs)  # warm the jit caches at the timed shape
+    t0 = time.time()
+    nbrs = snap.neighbors_batch(qs)
+    dt = time.time() - t0
+    hits = sum(len(x) > 0 for x in nbrs)
+    print(f"{label}: {args.queries} vertices in {dt*1e3:.1f} ms "
+          f"({args.queries/max(dt, 1e-9):.0f} q/s; {hits} non-empty)")
+
+
+def _restart_verify(snap, g, *, disk: int, reopen, where: str) -> None:
+    """Close, recover via ``reopen()``, and check the edge set survived."""
+    pre = snap.edge_set()
+    snap.release()
+    g.close()
+    t0 = time.time()
+    g2 = reopen()
+    t_rec = time.time() - t0
+    with g2.snapshot() as snap2:
+        post = snap2.edge_set()
+    match = "OK" if post == pre else "MISMATCH"
+    print(f"durable: {disk} bytes {where}; recovered {len(post)} edges "
+          f"in {t_rec:.2f}s after restart: {match}")
+    g2.close()
+    if match != "OK":
+        raise SystemExit("restart-and-verify FAILED")
+
+
+def _run_sharded(args, cfg) -> None:
+    """The sharded service tier: routed ingest with per-batch durability
+    acks, an epoch-consistent snapshot, gathered batched point-reads, and
+    (durable mode) a per-shard restart-and-verify phase."""
+    from ..shard import ShardedGraphStore, open_sharded_store
+
+    v = args.vertices
+    if args.durable:
+        g = open_sharded_store(args.durable, cfg, n_shards=args.shards,
+                               wal_sync=args.wal_sync)
+    else:
+        g = ShardedGraphStore(cfg, args.shards)
+    src, dst = powerlaw_edges(v, args.edges, seed=args.seed)
+
+    t0 = time.time()
+    n_ops, receipt, _ = _ingest_stream(g, src, dst, flush=lambda: None)
+    ack_line = None
+    t_ack = 0.0
+    if args.durable and receipt is not None:
+        # Ack BEFORE the flush barrier: flush rotates (fsyncs) every WAL,
+        # so acking afterwards would time a no-op — this measures the real
+        # group-commit wait for the last batch's shards only.
+        ta = time.time()
+        g.ack(receipt)
+        t_ack = time.time() - ta
+        ack_line = (f"ack(last batch) over shards {sorted(receipt.seqs)} "
+                    f"in {t_ack*1e3:.1f} ms")
+    g.flush_all()
+    # Headline matches the single-store path: ingest + flush, ack excluded
+    # (it is reported on its own line).
+    t_ingest = time.time() - t0 - t_ack
+    per_shard = [sum(sz) for sz in g.level_sizes()]
+    print(f"ingested {n_ops} ops into {g.n_shards} shards in "
+          f"{t_ingest:.2f}s ({n_ops/t_ingest:.0f} ops/s); "
+          f"edges/shard={per_shard}")
+    if ack_line:
+        print(ack_line)
+
+    snap = g.snapshot()
+    print(f"epoch={snap.epoch} taus={snap.taus}")
+    if args.analytics == "2hop":
         t0 = time.time()
-        g2 = open_store(args.durable)
-        t_rec = time.time() - t0
-        with g2.snapshot() as snap2:
-            post = snap2.edge_set()
-        match = "OK" if post == pre else "MISMATCH"
-        print(f"durable: {disk} bytes on disk; recovered {len(post)} edges "
-              f"in {t_rec:.2f}s after restart: {match}")
-        g2.close()
-        if match != "OK":
-            raise SystemExit("restart-and-verify FAILED")
+        top = _two_hop(snap, v, args.seed)
+        print(f"2hop in {time.time()-t0:.2f}s; top: {top.tolist()}")
+    else:
+        print(f"({args.analytics} analytics need the single-store CSR "
+              "path; skipped in --shards mode)")
+    _query_phase(snap, v, args, label="sharded batched reads")
+    if args.durable:
+        _restart_verify(snap, g, disk=g.disk_bytes(),
+                        reopen=lambda: open_sharded_store(args.durable),
+                        where=f"across {args.shards} shard dirs")
     else:
         snap.release()
         g.close()

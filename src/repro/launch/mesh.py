@@ -16,6 +16,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_shard_mesh(n_shards: int):
+    """1-D mesh over the `data` axis for the sharded graph service: one
+    shard (LSMGraph + WAL) per device slice.  On CPU hosts run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get N
+    slices; the host-side ``ShardedGraphStore`` needs no mesh at all."""
+    return jax.make_mesh((n_shards,), ("data",))
+
+
 def dp_axes(mesh) -> tuple:
     """The data-parallel axis bundle: ('pod','data') on multi-pod meshes."""
     names = mesh.axis_names

@@ -1,0 +1,79 @@
+"""Sharded graph service: mesh-partitioned LSMGraph shards.
+
+The single-node store (``repro.core.store``) serves a point-read batch in
+O(visible runs) jit'd passes; this package composes ``n_shards`` of those
+stores into the service's scale-out tier (ROADMAP "Sharded batched reads" +
+"Group-commit acks"; RapidStore's decoupled routing/storage split, the LSM
+survey's partitioned-WAL recipe).
+
+Partition / route / reassemble flow
+-----------------------------------
+
+::
+
+                     writes (src, dst, prop, marker)
+                        |  owner = src // v_local
+           +------------+-------------+
+           v            v             v          bucket_edge_batches /
+       shard 0       shard 1  ...  shard S-1     route_edge_batches_local
+      (LSMGraph)    (LSMGraph)    (LSMGraph)       (mesh all_to_all)
+       WAL 0          WAL 1         WAL S-1      <- per-shard commit seqs
+           ^            ^             ^
+           |  queries vs routed by owner; per-shard
+           |  Snapshot.neighbors_batch resolves its range
+           +------------+-------------+
+                        |  gather + inverse permutation
+                 results in caller order
+
+* **Partition** (``partition.RangePartition``): vertex ranges, shard ``s``
+  owns ``[s * v_local, (s + 1) * v_local)`` — the identical ``owner = src
+  // v_local`` rule as the mesh router over the ``data`` axis, so the
+  host facade and the ``shard_map``'d collective agree by construction.
+* **Route** (``router``): writes bucket by owner and apply shard-locally
+  (each shard runs its own MemGraph -> L0 -> L1 pipeline and its own WAL);
+  reads split the query vector by owner, keeping every occurrence's
+  caller-order position.
+* **Reassemble**: per-shard batched results concatenate (the host
+  ``all_gather``) and scatter back through the inverse permutation;
+  vertices owned by no shard resolve to empty adjacency — element-wise
+  identical to one store holding the whole graph.
+
+Tau-epoch snapshot protocol
+---------------------------
+
+Shards advance independent timestamp counters, so "a consistent cut" needs
+coordination.  ``ShardedGraphStore`` keeps a coordinator **epoch**: every
+routed write applies to ALL its owner shards while holding the epoch lock,
+and ``snapshot()`` pins every shard's ``Snapshot`` (collecting the vector of
+per-shard taus) under that same lock.  A multi-shard read therefore never
+mixes pre-/post-batch states across shards — a SUCCESSFUL batch is visible
+on every owner shard or on none — and never mixes pre-/post-flush states:
+flushes only rotate storage tiers beneath a pinned tau, which each shard's
+own snapshot immutability already guards.  (A batch whose apply RAISES on
+some shard is drained before the error propagates but stays partially
+applied — the same contract as the single store's partial-chunk semantics
+on a mid-batch overflow; there is no cross-shard rollback.)
+
+Durability acks
+---------------
+
+Each shard owns a WAL whose appends return monotonically increasing commit
+seqs (``storage.wal.WalAppend``).  A routed write returns a
+``ShardWriteReceipt`` with one seq per touched shard; ``ack(receipt)``
+awaits ``sync_upto(seq)`` on exactly those shards' logs — the group-commit
+ack tier: callers pay for the fsync of *their* batch on *their* shards only.
+"""
+from __future__ import annotations
+
+from .partition import RangePartition, shard_scaled_config
+from .router import (bucket_edge_batches, make_mesh_write_router,
+                     route_queries)
+from .store import (ShardWriteReceipt, ShardedGraphStore, ShardedSnapshot,
+                    open_sharded_store)
+
+__all__ = [
+    "RangePartition", "ShardWriteReceipt", "ShardedGraphStore",
+    "ShardedSnapshot", "bucket_edge_batches", "make_mesh_write_router",
+    "open_sharded_store", "route_queries",
+    "shard_scaled_config",
+]

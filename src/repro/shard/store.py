@@ -1,0 +1,461 @@
+"""``ShardedGraphStore``: n_shards independent LSMGraphs behind one facade.
+
+Write path:   updates bucket by owner shard (``router.bucket_edge_batches``)
+              and apply shard-locally in parallel under the coordinator
+              epoch; durable shards return per-shard WAL commit seqs in a
+              ``ShardWriteReceipt`` — ``ack(receipt)`` awaits fsync of each
+              shard's OWN batch only (``WriteAheadLog.sync_upto``), never a
+              global barrier.
+Read path:    ``ShardedSnapshot`` pins one ``Snapshot`` per shard under the
+              same epoch; ``neighbors_batch`` routes the query vector to
+              owning shards, resolves each sub-vector with that shard's
+              ``Snapshot.neighbors_batch``, and inverse-permutes the gathered
+              results back to caller order.
+Consistency:  the tau-epoch protocol (see ``repro.shard`` docstring) — every
+              write batch applies to ALL its owner shards under the epoch
+              lock, and snapshots collect per-shard taus under that same
+              lock, so a multi-shard read never observes half a batch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.store import LSMGraph, Snapshot, slice_adjacency
+from ..core.types import StoreConfig
+from ..storage import fsutil
+from . import router
+from .partition import RangePartition, shard_scaled_config
+
+SHARD_DIR_FMT = "shard-%02d"
+SHARD_META = "SHARDS.json"
+
+
+def _run_calls(pool: ThreadPoolExecutor, calls: list) -> list:
+    """Run ``(fn, args)`` pairs via ``pool``; calls that could not be
+    submitted (pool shut down — e.g. a read on a pinned snapshot, or an
+    ack racing ``close()``) run inline instead.  Already-submitted futures
+    are always awaited, never re-executed — and EVERY future is drained
+    before the first error propagates, so no per-shard work is left in
+    flight against state (pinned snapshots, open WALs) the caller may tear
+    down right after catching the exception."""
+    futs = []
+    for fn, args in calls:
+        try:
+            futs.append(pool.submit(fn, *args))
+        except RuntimeError:
+            futs.append(None)
+    results = []
+    first_err: Optional[BaseException] = None
+    for (fn, args), f in zip(calls, futs):
+        try:
+            results.append(f.result() if f is not None else fn(*args))
+        except BaseException as e:
+            results.append(None)
+            if first_err is None:
+                first_err = e
+    if first_err is not None:
+        raise first_err
+    return results
+
+
+class ShardWriteReceipt(NamedTuple):
+    """Ack token for one routed write batch.
+
+    ``seqs`` maps shard -> WAL commit seq for every durable shard that
+    received part of the batch (empty for in-memory stores); ``epoch`` is
+    the coordinator epoch the batch committed under.
+    """
+
+    epoch: int
+    seqs: Dict[int, int]
+
+
+class ShardedSnapshot:
+    """A cross-shard consistent read view: one pinned ``Snapshot`` per shard,
+    all collected under the same coordinator epoch."""
+
+    def __init__(self, part: RangePartition, snaps: Sequence[Snapshot],
+                 epoch: int, pool: ThreadPoolExecutor):
+        self.part = part
+        self.snaps = list(snaps)
+        self.epoch = epoch
+        self.taus: Tuple[int, ...] = tuple(s.tau for s in self.snaps)
+        self._pool = pool
+        self._released = False
+
+    def _map_shards(self, calls: list) -> list:
+        """Pool fan-out with inline fallback: a snapshot pinned before the
+        store closed must stay readable (the single-store contract)."""
+        return _run_calls(self._pool, calls)
+
+    # ------------------------------------------------------------------ reads
+    def neighbors_batch(self, vs, return_props: bool = False) -> list:
+        """Adjacency of every vertex in ``vs`` — route, per-shard batched
+        resolve, gather + inverse permutation.  Element-wise identical to a
+        single store holding the union of all shards (the oracle the shard
+        tests compare against); no-shard vertices resolve to empty arrays.
+
+        Routing piggybacks on the sort the batched read path needs anyway:
+        the SORTED unique query vector splits into per-shard contiguous
+        slices (range partition => owner is monotone in vertex id), each
+        shard resolves its slice with one ``_resolve_batch_chunked`` device
+        pipeline, and the per-shard ``(offsets, dst, prop)`` triples
+        concatenate back IN ORDER — dedup, routing, and per-query output
+        assembly each happen once globally, not once per shard."""
+        vs = np.asarray(vs, np.int64).ravel()
+        if vs.size == 0:
+            return []
+        uniq, inv = np.unique(vs, return_inverse=True)
+        B = len(uniq)
+        if B == 1:
+            # Keep the single-store point-read fast path: the owning
+            # shard's neighbors_batch takes its O(degree) scalar shortcut
+            # instead of a capacity-shaped batched resolve.
+            owner = int(self.part.owner_of(uniq)[0])
+            if owner < 0:
+                one = ((np.empty(0, np.int64), np.empty(0, np.float32))
+                       if return_props else np.empty(0, np.int64))
+            else:
+                one = self.snaps[owner].neighbors_batch(
+                    uniq, return_props=return_props)[0]
+            return [one] * len(vs)
+        counts = np.zeros(B, np.int64)
+        slices = []
+        for s in range(self.part.n_shards):
+            r_lo, r_hi = self.part.shard_range(s)
+            lo_i = int(np.searchsorted(uniq, r_lo))
+            hi_i = int(np.searchsorted(uniq, r_hi))
+            if hi_i > lo_i:
+                slices.append((s, lo_i, hi_i))
+        results = self._map_shards(
+            [(self.snaps[s]._resolve_batch_chunked, (uniq[lo_i:hi_i],))
+             for (s, lo_i, hi_i) in slices])
+        dst_parts, prop_parts = [], []
+        for (_s, lo_i, hi_i), (offs_s, dst_s, prop_s) in zip(slices, results):
+            counts[lo_i:hi_i] = np.diff(offs_s)
+            dst_parts.append(dst_s)
+            prop_parts.append(prop_s)
+        dst = (np.concatenate(dst_parts) if dst_parts
+               else np.empty(0, np.int64))
+        prop = (np.concatenate(prop_parts) if prop_parts
+                else np.empty(0, np.float32))
+        offs = np.zeros(B + 1, np.int64)
+        np.cumsum(counts, out=offs[1:])
+        return slice_adjacency(offs, dst, prop, inv, return_props)
+
+    def query_edges_batch(self, us, vs) -> np.ndarray:
+        """Batched edge membership — routed by source vertex; pairs whose
+        source lives on no shard are absent by definition (False)."""
+        us = np.asarray(us, np.int64).ravel()
+        vs = np.asarray(vs, np.int64).ravel()
+        if us.shape != vs.shape:
+            raise ValueError("us and vs must have the same length")
+        if us.size == 0:
+            return np.zeros(0, bool)
+        per_us, per_pos, n = router.route_queries(self.part, us)
+        out = np.zeros(n, bool)
+        touched = [s for s, sub_us in enumerate(per_us) if len(sub_us)]
+        results = self._map_shards(
+            [(self.snaps[s].query_edges_batch, (per_us[s], vs[per_pos[s]]))
+             for s in touched])
+        for s, res in zip(touched, results):
+            out[per_pos[s]] = res
+        return out
+
+    def degrees_batch(self, vs) -> np.ndarray:
+        return np.array([len(n) for n in self.neighbors_batch(vs)], np.int64)
+
+    def edge_set(self) -> set:
+        """Union of per-shard live edge sets (verification only — O(E))."""
+        out: set = set()
+        for snap in self.snaps:
+            out |= snap.edge_set()
+        return out
+
+    # -------------------------------------------------------------- lifecycle
+    def release(self) -> None:
+        if not self._released:
+            for snap in self.snaps:
+                snap.release()
+            self._released = True
+
+    def __enter__(self) -> "ShardedSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class ShardedGraphStore:
+    """Mesh-partitioned facade over ``n_shards`` independent ``LSMGraph``s.
+
+    Pass pre-built ``stores`` (e.g. durable, one directory per shard via
+    ``open_sharded_store``) or a ``cfg`` to build fresh in-memory shards.
+    Every shard keeps the GLOBAL vertex-id space in its config (its runs
+    simply never hold vertices outside its owned range), so per-shard reads
+    need no id translation.
+    """
+
+    def __init__(self, cfg: Optional[StoreConfig] = None, n_shards: int = 1,
+                 *, stores: Optional[Sequence[LSMGraph]] = None,
+                 max_workers: Optional[int] = None, scale_mem: bool = False):
+        if stores is not None:
+            self.shards = list(stores)
+            n_shards = len(self.shards)
+            cfg = self.shards[0].cfg
+        else:
+            assert cfg is not None, "need cfg or pre-built stores"
+            # Default: every shard keeps ``cfg``'s provisioning (scale-out =
+            # more same-sized nodes, aggregate capacity grows with S).
+            # scale_mem=True instead sizes each shard's fixed-capacity
+            # tiers to its 1/S slice (constant aggregate provisioning).
+            shard_cfg = shard_scaled_config(cfg, n_shards) if scale_mem \
+                else cfg
+            self.shards = [LSMGraph(shard_cfg) for _ in range(n_shards)]
+        self.cfg = cfg
+        self.part = RangePartition.for_vmax(cfg.vmax, n_shards)
+        # Coordinator epoch: writes apply to all owner shards under this
+        # lock; snapshots collect per-shard taus under it.  Held across the
+        # parallel per-shard applies (so a snapshot sees a batch on every
+        # owner shard or on none), NOT across reads.
+        self._epoch_lock = threading.RLock()
+        self._epoch = 0
+        # Fan-out concurrency: one worker per core (not per shard) — the
+        # per-shard resolves/applies are CPU-bound XLA+host work, and
+        # oversubscribing cores just thrashes the GIL and the XLA pool.
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers or max(
+                1, min(n_shards, os.cpu_count() or 1)),
+            thread_name_prefix="shard")
+
+    @property
+    def n_shards(self) -> int:
+        return self.part.n_shards
+
+    # ----------------------------------------------------------------- writes
+    def insert_edges(self, src, dst, prop=None) -> ShardWriteReceipt:
+        return self._apply_routed(src, dst, prop, delete=False)
+
+    def delete_edges(self, src, dst) -> ShardWriteReceipt:
+        return self._apply_routed(src, dst, None, delete=True)
+
+    def _apply_routed(self, src, dst, prop, *, delete: bool
+                      ) -> ShardWriteReceipt:
+        buckets = router.bucket_edge_batches(self.part, src, dst, prop)
+        with self._epoch_lock:
+            self._epoch += 1
+            epoch = self._epoch
+            touched, calls = [], []
+            for s, bucket in enumerate(buckets):
+                if bucket is None:
+                    continue
+                b_src, b_dst, b_prop = bucket
+                g = self.shards[s]
+                touched.append(s)
+                calls.append((g.delete_edges, (b_src, b_dst)) if delete
+                             else (g.insert_edges, (b_src, b_dst, b_prop)))
+            # _run_calls drains EVERY future before the first error
+            # propagates, so the epoch lock never releases with sub-batches
+            # still landing (the torn state the epoch protocol forbids).
+            # A failed shard leaves the batch partially applied (mirroring
+            # the single store's partial-chunk semantics on overflow) but
+            # never concurrently in flight.
+            seqs = dict(zip(touched, _run_calls(self._pool, calls)))
+        return ShardWriteReceipt(
+            epoch, {s: q for s, q in seqs.items() if q is not None})
+
+    def ack(self, receipt: ShardWriteReceipt) -> None:
+        """Await durability of ONE routed batch: per shard, block until that
+        shard's WAL fsynced the batch's commit seq (``sync_upto``).  Shards
+        untouched by the batch — and their WAL queues — are never waited
+        on.  No-op for in-memory shards (empty ``seqs``); safe when racing
+        ``close()`` (close fsyncs every WAL, so the inline fallback sees
+        the seq already durable)."""
+        _run_calls(self._pool, [(self.shards[s].ack, (seq,))
+                                for s, seq in receipt.seqs.items()])
+
+    # ------------------------------------------------------------------ reads
+    def snapshot(self) -> ShardedSnapshot:
+        with self._epoch_lock:
+            snaps = [g.snapshot() for g in self.shards]
+            epoch = self._epoch
+        return ShardedSnapshot(self.part, snaps, epoch, self._pool)
+
+    def sharded_neighbors_batch(self, vs, return_props: bool = False) -> list:
+        """One-shot routed batched read (snapshot + resolve + release)."""
+        with self.snapshot() as snap:
+            return snap.neighbors_batch(vs, return_props=return_props)
+
+    def sharded_query_edges_batch(self, us, vs) -> np.ndarray:
+        """One-shot routed batched edge-membership."""
+        with self.snapshot() as snap:
+            return snap.query_edges_batch(us, vs)
+
+    # ------------------------------------------------------------ maintenance
+    def flush_all(self) -> None:
+        """Flush every shard's MemGraph (parallel; barrier on completion)."""
+        _run_calls(self._pool, [(g.flush_memgraph, ()) for g in self.shards])
+
+    def compact_all(self) -> None:
+        """Drain every shard's L0 into L1+ (parallel per-shard compaction —
+        the steady-state maintenance a shard scheduler would run between
+        ingest bursts; tightens run capacities for the read tier)."""
+        _run_calls(self._pool, [(g.compact_l0, ()) for g in self.shards])
+
+    def sync(self) -> None:
+        """Global durability barrier over every shard, fsyncing in parallel
+        (close-time use; the per-batch path is ``ack``)."""
+        _run_calls(self._pool, [(g.sync, ()) for g in self.shards])
+
+    def level_sizes(self) -> List[List[int]]:
+        return [g.level_sizes() for g in self.shards]
+
+    def disk_bytes(self) -> int:
+        return sum(g.disk_bytes() for g in self.shards)
+
+    def close(self) -> None:
+        for g in self.shards:
+            g.close()
+        self._pool.shutdown(wait=True)
+
+
+def _load_shard_meta(root: str, meta_path: str) -> Optional[dict]:
+    """Read SHARDS.json; a torn/unparseable meta with no shard directories
+    yet (a crash during the very first create, before the atomic rename
+    protocol existed or mid-rename on a non-atomic filesystem) is safely
+    re-creatable — no shard data can exist without its directory."""
+    if not os.path.exists(meta_path):
+        return None
+    try:
+        with open(meta_path) as f:
+            return json.load(f)
+    # Only torn CONTENT is re-creatable; a transient read failure (EACCES,
+    # EIO) must propagate rather than delete a valid meta.
+    except json.JSONDecodeError:
+        has_shards = any(
+            name.startswith("shard-") for name in os.listdir(root))
+        if has_shards:
+            raise ValueError(
+                f"{root}: unreadable {SHARD_META} but shard directories "
+                "exist — refusing to guess the shard count") from None
+        os.unlink(meta_path)
+        return None
+
+
+def open_sharded_store(root: str, cfg: Optional[StoreConfig] = None, *,
+                       n_shards: Optional[int] = None,
+                       wal_sync: str = "batch",
+                       wal_sync_interval: float = 0.05,
+                       scale_mem: bool = False) -> ShardedGraphStore:
+    """Open (or create) a durable sharded store rooted at ``root``.
+
+    Layout: ``root/SHARDS.json`` records the shard count; each shard is a
+    full durable store directory (own WAL + segments + manifest) under
+    ``root/shard-<s>/``.  Reopen recovers every shard independently —
+    crash recovery composes because shards share nothing.
+    """
+    os.makedirs(root, exist_ok=True)
+    meta_path = os.path.join(root, SHARD_META)
+    meta = _load_shard_meta(root, meta_path)
+    write_meta = meta is None
+    pre_existing: List[str] = []
+    if meta is not None:
+        if n_shards is not None and n_shards != meta["n_shards"]:
+            raise ValueError(
+                f"{root} holds {meta['n_shards']} shards; asked for "
+                f"{n_shards} (resharding is not supported yet)")
+        n_shards = meta["n_shards"]
+    else:
+        # No meta.  Shard dirs present mean a crash before the meta landed
+        # (it is written LAST): heal — no write can have been acknowledged
+        # before open_sharded_store returned, so the layout is completable.
+        pre_existing = [name for name in os.listdir(root)
+                        if name.startswith("shard-")]
+        # A crashed parallel create can leave GAP-numbered dirs (the pool
+        # creates them concurrently): infer the count from the highest
+        # index so every surviving dir is opened, never orphaned.
+        n_found = 1 + max(
+            (int(name.split("-", 1)[1]) for name in pre_existing),
+            default=-1)
+        if n_found and n_shards is None:
+            n_shards = n_found           # no-arg reopen: adopt what exists
+        elif n_found and n_shards < n_found:
+            raise ValueError(
+                f"{root} holds {n_found} shard dirs; asked for {n_shards}")
+        elif n_shards is None:
+            raise ValueError(f"{root}: fresh directory needs n_shards")
+        elif cfg is None and not pre_existing:
+            raise ValueError(f"{root}: fresh directory needs cfg")
+    from ..storage import open_store
+    shard_cfg = cfg
+    if cfg is not None and scale_mem:
+        shard_cfg = shard_scaled_config(cfg, n_shards)
+    # Shards share nothing (own dir, WAL, manifest), so open/recover them in
+    # parallel: restart time tracks the largest shard, not the sum.  Every
+    # successfully-opened store is closed if ANY sibling open fails — no
+    # leaked WAL fds / fsync threads on a partially-corrupt layout.
+    with ThreadPoolExecutor(
+            max_workers=max(1, min(n_shards, os.cpu_count() or 1))) as pool:
+        futs = [pool.submit(open_store,
+                            os.path.join(root, SHARD_DIR_FMT % s), shard_cfg,
+                            wal_sync=wal_sync,
+                            wal_sync_interval=wal_sync_interval)
+                for s in range(n_shards)]
+        stores = []
+        first_err: Optional[BaseException] = None
+        for f in futs:
+            try:
+                stores.append(f.result())
+            except BaseException as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            for g in stores:
+                g.close()
+            raise first_err
+    if write_meta and pre_existing and n_shards != len(pre_existing):
+        # Completing a half-created layout to a LARGER count is only sound
+        # while the pre-existing shards are empty — growing n_shards
+        # rewires the partition, so data written under the old count would
+        # silently change owners.  (A genuine crashed create has no data:
+        # the meta lands before open_sharded_store ever returns.)
+        pre_idx = sorted(int(name.split("-", 1)[1]) for name in pre_existing)
+        if any(stores[i].tau > 0 for i in pre_idx if i < len(stores)):
+            for g in stores:
+                g.close()
+            # Remove the fresh (just-created, empty by construction) dirs
+            # so the refusal leaves the on-disk layout exactly as found —
+            # a later no-arg adopt must see the data-bearing count.
+            for s in range(n_shards):
+                name = SHARD_DIR_FMT % s
+                if name not in pre_existing:
+                    shutil.rmtree(os.path.join(root, name),
+                                  ignore_errors=True)
+            raise ValueError(
+                f"{root}: meta lost but existing shards hold data; reopen "
+                "without n_shards to adopt the on-disk layout")
+    if write_meta:
+        # Meta lands LAST and crash-atomically (tmp + fsync + rename + dir
+        # fsync): every shard dir/manifest it names already exists, so a
+        # reopen either sees the full layout or heals from the dirs above.
+        tmp = meta_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"n_shards": n_shards, "format": 1}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, meta_path)
+        fsutil.fsync_dir(root)
+    # Shard configs keep the GLOBAL vmax, so the partition (derived from
+    # stores[0].cfg at reopen) covers the original vertex-id space.
+    return ShardedGraphStore(stores=stores)
+
+
+__all__ = ["ShardWriteReceipt", "ShardedGraphStore", "ShardedSnapshot",
+           "open_sharded_store"]

@@ -123,9 +123,10 @@ from __future__ import annotations
 from .engine import DurableStorage, SimulatedCrash, open_store
 from .manifest import Manifest
 from .segments import read_segment, read_segment_header, write_segment
-from .wal import WriteAheadLog
+from .wal import WalAppend, WriteAheadLog
 
 __all__ = [
-    "DurableStorage", "Manifest", "SimulatedCrash", "WriteAheadLog",
-    "open_store", "read_segment", "read_segment_header", "write_segment",
+    "DurableStorage", "Manifest", "SimulatedCrash", "WalAppend",
+    "WriteAheadLog", "open_store", "read_segment", "read_segment_header",
+    "write_segment",
 ]

@@ -113,17 +113,19 @@ class DurableStorage:
                 "created_ts": rf.created_ts, "nv": rf.nv, "ne": rf.ne}
 
     # ------------------------------------------------------------ store hooks
-    def on_apply(self, src, dst, ts, marker, prop) -> None:
+    def on_apply(self, src, dst, ts, marker, prop) -> int:
         """WAL-before-MemGraph: called under the store lock, right after ts
-        assignment.  A buffered write; fsync follows the group-commit policy."""
-        n = self.wal.append_edges(src, dst, ts, marker, prop)
-        self.store.io.wal_write += n
+        assignment.  A buffered write; fsync follows the group-commit policy.
+        Returns the append's commit seq — the ``ack``/``sync_upto`` token."""
+        rcpt = self.wal.append_edges(src, dst, ts, marker, prop)
+        self.store.io.wal_write += rcpt.nbytes
         self._crashpoint("post_wal_append")
+        return rcpt.seq
 
     def on_apply_abort(self, ts_start: int) -> None:
         """The batch just WAL'd failed its MemGraph insert (exception raised
         to the caller): log an abort so replay doesn't resurrect it."""
-        self.store.io.wal_write += self.wal.append_abort(ts_start)
+        self.store.io.wal_write += self.wal.append_abort(ts_start).nbytes
 
     def on_flush_rotate(self, boundary_ts: int) -> None:
         """MemGraph double-buffer swap: records with ts >= boundary_ts go to
@@ -181,6 +183,12 @@ class DurableStorage:
         """Durability barrier (used by the concurrent wrapper's background
         thread and ``close``)."""
         self.wal.sync()
+
+    def sync_upto(self, seq: int) -> None:
+        """Per-batch ack: await durability of WAL commit seq ``seq`` only
+        (this store's log — a sharded service fsyncs one shard's WAL per
+        ack, never its siblings')."""
+        self.wal.sync_upto(seq)
 
     def disk_bytes(self) -> int:
         """Actual bytes on disk: manifest + WAL files + segment files."""

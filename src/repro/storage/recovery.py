@@ -57,6 +57,18 @@ def recover(root: str, cfg: Optional[StoreConfig] = None, *,
     storage = DurableStorage(
         root, wal_sync=wal_sync, wal_sync_interval=wal_sync_interval,
         wal_start_seq=wal_max_seq + 1, wal_last_ts=wal_last_ts)
+    try:
+        return _recover_into(storage, root, cfg, st, wal_records)
+    except BaseException:
+        # A failed recovery (corrupt segment, manifest disagreement,
+        # replay overflow) must not leak the LOCK fd, the WAL fsync
+        # thread, or the freshly-created wal file handle per attempt.
+        storage.close()
+        raise
+
+
+def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
+                  st, wal_records) -> LSMGraph:
     store = LSMGraph(cfg, durability=None)  # build empty, then restore state
 
     # -- load live segments; GC orphans (crashed publish attempts).

@@ -96,7 +96,9 @@ def read_segment(path: str, *, verify: bool = True
     need = 4 * (nv + (nv + 1) + ne + ne) + ne + 4 * ne
     if mm.shape[0] < need:
         raise ValueError(f"segment {path}: truncated body")
-    if verify and zlib.crc32(mm[:need].tobytes()) != meta["body_crc"]:
+    # crc32 accepts the buffer protocol: no .tobytes() copy of the whole
+    # mmapped body — cold loads stay page-cache-streamed.
+    if verify and zlib.crc32(mm[:need]) != meta["body_crc"]:
         raise ValueError(f"segment {path}: body CRC mismatch")
     off = 0
 

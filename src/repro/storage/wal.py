@@ -20,11 +20,21 @@ import os
 import struct
 import threading
 import zlib
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
 from .fsutil import fsync_dir
+
+
+class WalAppend(NamedTuple):
+    """Receipt for one WAL append: a monotonically increasing per-log commit
+    sequence number (the group-commit ack token — ``sync_upto(seq)`` awaits
+    durability of exactly this record and everything before it) plus the
+    record's encoded size for byte accounting."""
+
+    seq: int
+    nbytes: int
 
 _MAGIC = 0x314C4157  # "WAL1" little-endian
 _HDR = struct.Struct("<IIIB3x")  # magic, payload crc32, payload len, rtype
@@ -152,6 +162,16 @@ class WriteAheadLog:
         self._seq = start_seq
         self._last_ts: Dict[int, int] = dict(last_ts_by_seq or {})
         self._last_ts.setdefault(self._seq, -1)
+        # Commit sequence numbers: every append gets the next seq;
+        # ``_durable_seq`` trails it and advances when an fsync covering
+        # that append completes.  Seqs are based at ``start_seq << 32`` so
+        # each reopen's range is disjoint from every earlier incarnation's
+        # — a receipt held across a crash/reopen can never alias a new
+        # batch's seq (``sync_upto`` rejects anything below the base).
+        self._seq_base = start_seq << 32
+        self._next_commit_seq = self._seq_base
+        self._appended_seq = self._seq_base - 1
+        self._durable_seq = self._seq_base - 1
         self._fd = os.open(_wal_path(wal_dir, self._seq),
                            os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
         if sync != "off":
@@ -165,35 +185,42 @@ class WriteAheadLog:
             self._syncer.start()
 
     # ------------------------------------------------------------------ write
-    def append_edges(self, src, dst, ts, marker, prop) -> int:
-        """Append one edge-batch record; returns bytes written.  Caller (the
-        store) serializes appends; fsync happens per the sync policy."""
-        rec = encode_edges(src, dst, ts, marker, prop)
+    def _append_record(self, rec: bytes,
+                       last_ts: Optional[int] = None) -> WalAppend:
+        """Shared framed-append core: seq allocation, fail-stop check, and
+        the per-policy fsync — one implementation for every record type so
+        the commit-seq / fsyncgate protocol cannot desynchronize."""
         with self._io_lock:
             self._check_failed()
             os.write(self._fd, rec)
-            if len(ts):
-                self._last_ts[self._seq] = int(ts[-1])
+            seq = self._next_commit_seq
+            self._next_commit_seq += 1
+            self._appended_seq = seq
+            if last_ts is not None:
+                self._last_ts[self._seq] = last_ts
             if self.sync_mode == "always":
                 self._fsync_latched(self._fd)
+                self._durable_seq = seq
             elif self.sync_mode == "batch":
                 self._dirty.set()
-        return len(rec)
+        return WalAppend(seq, len(rec))
 
-    def append_abort(self, ts_start: int) -> int:
+    def append_edges(self, src, dst, ts, marker, prop) -> WalAppend:
+        """Append one edge-batch record; returns a ``WalAppend`` receipt with
+        the record's monotonically increasing commit seq (awaitable via
+        ``sync_upto``) and its encoded size.  Caller (the store) serializes
+        appends; fsync happens per the sync policy."""
+        rec = encode_edges(src, dst, ts, marker, prop)
+        return self._append_record(
+            rec, last_ts=int(ts[-1]) if len(ts) else None)
+
+    def append_abort(self, ts_start: int) -> WalAppend:
         """Log that the preceding edge record's insert FAILED after its WAL
         append (the caller saw an exception): replay must not resurrect it."""
         payload = struct.pack("<q", ts_start)
         rec = _HDR.pack(_MAGIC, zlib.crc32(payload), len(payload),
                         REC_ABORT) + payload
-        with self._io_lock:
-            self._check_failed()
-            os.write(self._fd, rec)
-            if self.sync_mode == "always":
-                self._fsync_latched(self._fd)
-            elif self.sync_mode == "batch":
-                self._dirty.set()
-        return len(rec)
+        return self._append_record(rec)
 
     def sync(self) -> None:
         """Durability barrier.  The fsync runs on a dup'd fd OUTSIDE the
@@ -209,6 +236,7 @@ class WriteAheadLog:
                 if self._fd < 0 or not self._dirty.is_set():
                     return
                 fd = os.dup(self._fd)
+                upto = self._appended_seq  # every seq <= upto is in the file
                 self._dirty.clear()
             try:
                 os.fsync(fd)
@@ -223,6 +251,42 @@ class WriteAheadLog:
                 raise
             finally:
                 os.close(fd)
+            with self._io_lock:
+                self._durable_seq = max(self._durable_seq, upto)
+
+    def sync_upto(self, seq: int) -> None:
+        """Await durability of commit seq ``seq`` and everything before it —
+        the per-batch ack primitive (ROADMAP "group-commit acks").  Returns
+        immediately if a group commit already covered ``seq``; otherwise
+        joins (or triggers) one fsync instead of a global barrier.  A no-op
+        under the ``"off"`` policy (no durability promised)."""
+        if self.sync_mode == "off" or seq < 0:
+            return
+        while True:
+            with self._io_lock:
+                if seq < self._seq_base or seq > self._appended_seq:
+                    # Outside this incarnation's appended range: a receipt
+                    # held across a reopen (below the base) or a seq this
+                    # log never issued.  Waiting would either ack the WRONG
+                    # batch or spin forever — refuse instead.
+                    raise ValueError(
+                        f"commit seq {seq} was not appended by this log "
+                        f"incarnation (range [{self._seq_base}, "
+                        f"{self._appended_seq}]; stale receipt from a "
+                        "previous open?)")
+                if self._durable_seq >= seq:
+                    return
+                self._check_failed()
+                if self._fd < 0:
+                    raise OSError(
+                        f"WAL closed before commit seq {seq} became durable")
+            # No busy-spin: sync() acquires _sync_gate BEFORE its dirty
+            # check, and the background group commit holds that gate for
+            # the whole os.fsync — so this call blocks until any in-flight
+            # fsync (which may already cover our seq) completes, then
+            # fsyncs itself only if appends landed after it.  One group
+            # commit after our append necessarily covers our seq.
+            self.sync()
 
     def _fsync_latched(self, fd: int) -> None:
         """fsync under the io lock, latching the fail-stop flag on error
@@ -241,10 +305,20 @@ class WriteAheadLog:
 
     def rotate(self) -> int:
         """Fsync + close the active file and start ``wal-<seq+1>.log``.
-        Called at MemGraph flush rotation; returns the new seq."""
-        with self._io_lock:
+        Called at MemGraph flush rotation; returns the new seq.
+
+        Takes ``_sync_gate`` first (same order as ``sync()``): an in-flight
+        group commit whose fsync FAILS latches the fail-stop under the gate,
+        and rotating must observe that latch — a retried fsync on the same
+        file description reports success for pages the kernel already
+        dropped, so advancing the durable seq here without the gate would
+        falsely ack lost records."""
+        with self._sync_gate, self._io_lock:
             if self.sync_mode != "off":
+                self._check_failed()
                 self._fsync_latched(self._fd)
+                self._durable_seq = self._appended_seq
+                self._dirty.clear()
             os.close(self._fd)
             self._seq += 1
             self._last_ts[self._seq] = -1
@@ -289,12 +363,20 @@ class WriteAheadLog:
         self._stop.set()
         if self._syncer is not None:
             self._syncer.join(timeout=2)
-        with self._io_lock:
+        # Gate first (sync()'s order): serialize with an in-flight group
+        # commit so its failure latch is observed before we claim the tail
+        # durable (see rotate()).
+        with self._sync_gate, self._io_lock:
             if self._fd >= 0:
                 if self.sync_mode != "off":
                     try:
-                        os.fsync(self._fd)
+                        # A latched fsync failure means durability is
+                        # unknown: close best-effort, but never claim the
+                        # tail durable (sync_upto must keep failing).
+                        if not self._sync_failed:
+                            os.fsync(self._fd)
+                            self._durable_seq = self._appended_seq
                     except OSError:
-                        pass
+                        self._sync_failed = True
                 os.close(self._fd)
                 self._fd = -1

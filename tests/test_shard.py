@@ -1,0 +1,614 @@
+"""Sharded graph service: partition round-trips, routed reads vs the
+single-store oracle, tau-epoch snapshot consistency under concurrent
+writes, and per-shard WAL commit-seq acks.
+
+The load-bearing invariant: a shard-routed batched read is ELEMENT-WISE
+IDENTICAL to ``Snapshot.neighbors_batch`` on one store holding the whole
+graph — including vertices owned by no shard and duplicate query ids.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import LSMGraph
+from repro.shard import (RangePartition, ShardedGraphStore,
+                         bucket_edge_batches, open_sharded_store)
+from conftest import small_store_cfg
+
+
+def _random_graph(seed, n_edges=4000, vmax=1 << 12):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, vmax, n_edges).astype(np.int64)
+    dst = rng.integers(0, vmax, n_edges).astype(np.int64)
+    prop = rng.random(n_edges).astype(np.float32)
+    return src, dst, prop
+
+
+def _build_pair(n_shards, seed=0, with_deletes=True):
+    """The same update history applied to a sharded store and the oracle."""
+    cfg = small_store_cfg()
+    src, dst, prop = _random_graph(seed)
+    sharded = ShardedGraphStore(cfg, n_shards)
+    oracle = LSMGraph(cfg)
+    sharded.insert_edges(src, dst, prop)
+    oracle.insert_edges(src, dst, prop)
+    if with_deletes:
+        rng = np.random.default_rng(seed + 1)
+        di = rng.choice(len(src), len(src) // 10, replace=False)
+        sharded.delete_edges(src[di], dst[di])
+        oracle.delete_edges(src[di], dst[di])
+    return sharded, oracle
+
+
+# ------------------------------------------------------------------ partition
+def test_partition_ranges_cover_vmax_exactly_once():
+    for n in (1, 2, 3, 4, 7, 8):
+        part = RangePartition.for_vmax(1000, n)
+        seen = []
+        for s in range(n):
+            lo, hi = part.shard_range(s)
+            seen.extend(range(lo, hi))
+        assert seen == list(range(1000))
+        owner = part.owner_of(np.arange(1000))
+        for s in range(n):
+            lo, hi = part.shard_range(s)
+            assert (owner[lo:hi] == s).all()
+
+
+def test_partition_out_of_range_owns_nothing():
+    part = RangePartition.for_vmax(100, 4)
+    assert part.owner_of(np.array([-1, 100, 5000])).tolist() == [-1, -1, -1]
+
+
+def test_split_by_owner_roundtrip_with_duplicates():
+    part = RangePartition.for_vmax(100, 3)
+    vs = np.array([5, 99, 5, 42, -7, 5, 200, 0])
+    per_vids, per_pos = part.split_by_owner(vs)
+    out = np.full(len(vs), -1, np.int64)
+    for vids, pos in zip(per_vids, per_pos):
+        out[pos] = vids
+    keep = part.owner_of(vs) >= 0
+    np.testing.assert_array_equal(out[keep], vs[keep])
+    assert (out[~keep] == -1).all()
+
+
+def test_route_queries_positions_are_inverse_permutation():
+    from repro.shard import route_queries
+    part = RangePartition.for_vmax(90, 3)
+    vs = np.array([80, 3, 80, 45, -2, 3, 91, 0])
+    per_vs, per_pos, n = route_queries(part, vs)
+    assert n == len(vs)
+    out = np.full(n, -1, np.int64)
+    for vids, pos in zip(per_vs, per_pos):   # scatter back by position
+        out[pos] = vids
+    owner = part.owner_of(vs)
+    np.testing.assert_array_equal(out[owner >= 0], vs[owner >= 0])
+    assert (out[owner < 0] == -1).all()      # no-shard ids touched nowhere
+
+
+def test_bucket_edges_rejects_unowned_sources():
+    part = RangePartition.for_vmax(100, 2)
+    with pytest.raises(ValueError):
+        bucket_edge_batches(part, [5, 500], [1, 2])
+
+
+# ------------------------------------------------------- oracle equivalence
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4, 7])
+def test_sharded_reads_match_oracle(n_shards):
+    sharded, oracle = _build_pair(n_shards, seed=n_shards)
+    rng = np.random.default_rng(99)
+    # duplicates, unsorted, absent ids, and no-shard ids (>= vmax, negative)
+    qs = np.concatenate([
+        rng.integers(0, 1 << 12, 400), [7, 7, 7, 0, (1 << 12) - 1],
+        [1 << 13, -5, 1 << 12]]).astype(np.int64)
+    with oracle.snapshot() as osnap:
+        ref = osnap.neighbors_batch(qs)
+        got = sharded.sharded_neighbors_batch(qs)
+        assert len(got) == len(ref)
+        for i, (a, b) in enumerate(zip(ref, got)):
+            np.testing.assert_array_equal(b, a, err_msg=f"query {qs[i]}")
+            assert b.dtype == a.dtype
+        us = qs[:200]
+        vs = rng.integers(0, 1 << 12, 200).astype(np.int64)
+        np.testing.assert_array_equal(
+            sharded.sharded_query_edges_batch(us, vs),
+            osnap.query_edges_batch(us, vs))
+    sharded.close()
+
+
+def test_sharded_single_vertex_fast_path_matches_oracle():
+    """A 1-unique-vertex batch takes the owning shard's scalar shortcut —
+    results must still equal the oracle, incl. the no-shard case."""
+    sharded, oracle = _build_pair(4, seed=23)
+    with oracle.snapshot() as osnap:
+        for v in (0, 7, (1 << 12) - 1, 1 << 13, -4):
+            got = sharded.sharded_neighbors_batch([v, v])
+            ref = osnap.neighbors_batch([v, v])
+            for a, b in zip(ref, got):
+                np.testing.assert_array_equal(b, a, err_msg=f"vertex {v}")
+        gd, gp = sharded.sharded_neighbors_batch([7], return_props=True)[0]
+        rd, rp = osnap.neighbors_batch([7], return_props=True)[0]
+        np.testing.assert_array_equal(gd, rd)
+        np.testing.assert_array_equal(gp, rp)
+    sharded.close()
+
+
+def test_sharded_props_match_oracle():
+    sharded, oracle = _build_pair(4, seed=17)
+    qs = np.arange(0, 1 << 12, 13)
+    with oracle.snapshot() as osnap, sharded.snapshot() as ssnap:
+        for (rd, rp), (gd, gp) in zip(
+                osnap.neighbors_batch(qs, return_props=True),
+                ssnap.neighbors_batch(qs, return_props=True)):
+            np.testing.assert_array_equal(gd, rd)
+            np.testing.assert_array_equal(gp, rp)
+    sharded.close()
+
+
+def _check_random_shard_roundtrip(n_shards, seed):
+    """One property example: random graph + deletes, random query mix with
+    no-shard ids and guaranteed duplicates, sharded == oracle elementwise."""
+    cfg = small_store_cfg()
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 600))
+    src = rng.integers(0, 1 << 12, n).astype(np.int64)
+    dst = rng.integers(0, 1 << 12, n).astype(np.int64)
+    sharded = ShardedGraphStore(cfg, n_shards)
+    oracle = LSMGraph(cfg)
+    sharded.insert_edges(src, dst)
+    oracle.insert_edges(src, dst)
+    nd = int(rng.integers(0, n // 2 + 1))
+    if nd:
+        di = rng.choice(n, nd, replace=False)
+        sharded.delete_edges(src[di], dst[di])
+        oracle.delete_edges(src[di], dst[di])
+    qs = np.concatenate([
+        rng.integers(-8, (1 << 12) + 8, 64),
+        rng.choice(src, min(16, n)),          # guaranteed hits + duplicates
+    ]).astype(np.int64)
+    with oracle.snapshot() as osnap:
+        ref = osnap.neighbors_batch(qs)
+        got = sharded.sharded_neighbors_batch(qs)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(b, a, err_msg=(n_shards, seed))
+    sharded.close()
+
+
+def test_sharded_property_random_shard_counts():
+    """Property sweep over random shard counts / graphs / query mixes —
+    always runs (no optional deps); drawn from a fixed meta-seed."""
+    meta = np.random.default_rng(2024)
+    for _ in range(6):
+        _check_random_shard_roundtrip(int(meta.integers(1, 7)),
+                                      int(meta.integers(0, 10_000)))
+
+
+def test_sharded_property_hypothesis():
+    """The same property under hypothesis' adversarial example search (only
+    where the dev deps are installed; CI installs requirements-dev.txt)."""
+    pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(n_shards=st.integers(1, 6), seed=st.integers(0, 1000))
+    def check(n_shards, seed):
+        _check_random_shard_roundtrip(n_shards, seed)
+
+    check()
+
+
+def test_sharded_reads_consistent_under_concurrent_writes():
+    """Byte-identity holds while a writer keeps mutating: snapshots pinned
+    at the same stream position answer identically even as both stores
+    ingest more batches underneath the pinned views."""
+    cfg = small_store_cfg()
+    sharded = ShardedGraphStore(cfg, 4)
+    oracle = LSMGraph(cfg)
+    apply_lock = threading.Lock()   # both-stores-at-same-prefix invariant
+    stop = threading.Event()
+    rng = np.random.default_rng(5)
+    src, dst, _ = _random_graph(5, n_edges=2000)
+    sharded.insert_edges(src, dst)
+    oracle.insert_edges(src, dst)
+
+    def writer():
+        wrng = np.random.default_rng(6)
+        while not stop.is_set():
+            s = wrng.integers(0, 1 << 12, 64).astype(np.int64)
+            d = wrng.integers(0, 1 << 12, 64).astype(np.int64)
+            with apply_lock:
+                sharded.insert_edges(s, d)
+                oracle.insert_edges(s, d)
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        for _ in range(5):
+            with apply_lock:   # pin both views at an identical prefix
+                osnap = oracle.snapshot()
+                ssnap = sharded.snapshot()
+            # resolve OUTSIDE the lock: the writer keeps appending while
+            # these pinned snapshots answer.
+            qs = rng.integers(0, 1 << 12, 128).astype(np.int64)
+            ref = osnap.neighbors_batch(qs)
+            got = ssnap.neighbors_batch(qs)
+            for a, b in zip(ref, got):
+                np.testing.assert_array_equal(b, a)
+            osnap.release()
+            ssnap.release()
+    finally:
+        stop.set()
+        t.join(timeout=30)
+    sharded.close()
+
+
+def test_epoch_snapshot_never_splits_a_batch():
+    """A write batch spanning shards is visible on ALL its owner shards or
+    none: mirrored edge pairs (u->v on shard 0, v->u on shard 3) must appear
+    atomically in every snapshot taken concurrently with the writes."""
+    cfg = small_store_cfg()
+    sharded = ShardedGraphStore(cfg, 4)
+    lo0 = 5                      # shard 0 territory
+    hi3 = (1 << 12) - 5          # shard 3 territory
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        k = 0
+        while not stop.is_set() and k < 200:
+            # one batch holding BOTH directions: routed to two shards
+            sharded.insert_edges([lo0 + 0, hi3 - 0], [hi3 - 0, lo0 + 0],
+                                 prop=[float(k), float(k)])
+            k += 1
+
+    def reader():
+        while not stop.is_set():
+            with sharded.snapshot() as snap:
+                has = snap.query_edges_batch([lo0, hi3], [hi3, lo0])
+                if has[0] != has[1]:
+                    errors.append(tuple(has))
+                    return
+
+    tw = threading.Thread(target=writer)
+    tr = threading.Thread(target=reader)
+    tw.start(); tr.start()
+    tw.join(timeout=60)
+    stop.set()
+    tr.join(timeout=30)
+    assert not errors, f"snapshot observed half a routed batch: {errors[0]}"
+    sharded.close()
+
+
+# --------------------------------------------------------------- WAL + acks
+def test_wal_commit_seqs_monotone_and_sync_upto(tmp_path):
+    from repro.storage import WriteAheadLog
+    wal = WriteAheadLog(str(tmp_path / "wal"), sync="batch",
+                        sync_interval=30.0)  # bg thread effectively idle
+    seqs = []
+    for i in range(5):
+        r = wal.append_edges(np.asarray([i]), np.asarray([i + 1]),
+                             np.asarray([i]), np.asarray([False]),
+                             np.asarray([0.0], np.float32))
+        assert r.nbytes > 0
+        seqs.append(r.seq)
+    assert seqs == sorted(seqs) and len(set(seqs)) == 5
+    wal.sync_upto(seqs[2])       # ack a middle batch without a global barrier
+    wal.sync_upto(seqs[-1])
+    wal.sync_upto(seqs[0])       # already durable: returns immediately
+    wal.close()
+
+
+def test_wal_sync_upto_off_mode_is_noop(tmp_path):
+    from repro.storage import WriteAheadLog
+    wal = WriteAheadLog(str(tmp_path / "wal"), sync="off")
+    r = wal.append_edges(np.asarray([1]), np.asarray([2]), np.asarray([0]),
+                         np.asarray([False]), np.asarray([0.0], np.float32))
+    wal.sync_upto(r.seq)         # no durability promised, must not block
+    wal.close()
+
+
+def test_store_ack_awaits_own_batch(tmp_path):
+    from repro.storage import open_store
+    g = open_store(str(tmp_path / "store"), small_store_cfg(),
+                   wal_sync="batch", wal_sync_interval=30.0)
+    seq1 = g.insert_edges([1, 2], [3, 4])
+    seq2 = g.insert_edges([5], [6])
+    assert seq1 is not None and seq2 is not None and seq2 > seq1
+    g.ack(seq1)                  # per-batch ack
+    g.ack(seq2)
+    g.ack(None)                  # in-memory/None contract: no-op
+    g.close()
+    g2 = open_store(str(tmp_path / "store"))
+    with g2.snapshot() as snap:
+        assert snap.edge_set() == {(1, 3), (2, 4), (5, 6)}
+    g2.close()
+
+
+def test_sync_upto_stale_seq_raises(tmp_path):
+    """A seq this log never appended (e.g. a receipt held across a reopen,
+    where commit seqs reset) must raise, not wait forever."""
+    from repro.storage import WriteAheadLog
+    wal = WriteAheadLog(str(tmp_path / "wal"), sync="batch",
+                        sync_interval=30.0)
+    r = wal.append_edges(np.asarray([1]), np.asarray([2]), np.asarray([0]),
+                         np.asarray([False]), np.asarray([0.0], np.float32))
+    with pytest.raises(ValueError, match="not appended by this log"):
+        wal.sync_upto(r.seq + 37)
+    wal.close()
+
+
+def test_ack_with_receipt_from_previous_open_raises(tmp_path):
+    """Commit seqs are based per log incarnation: a receipt that survived
+    a crash/reopen must be refused, not silently ack a NEW batch that
+    happens to share the (restarted) seq."""
+    from repro.storage import open_store
+    g = open_store(str(tmp_path / "st"), small_store_cfg())
+    old_seq = g.insert_edges([1], [2])
+    g.close()
+    g2 = open_store(str(tmp_path / "st"))
+    g2.insert_edges([3], [4])     # new incarnation, new seq range
+    with pytest.raises(ValueError, match="previous open"):
+        g2.ack(old_seq)
+    g2.close()
+
+
+def test_latched_fsync_failure_never_acks(tmp_path):
+    """fsyncgate fail-stop: once an fsync failure is latched, neither
+    rotate() nor close() may advance the durable seq — sync_upto must keep
+    raising instead of falsely acking records the kernel dropped."""
+    from repro.storage import WriteAheadLog
+    wal = WriteAheadLog(str(tmp_path / "wal"), sync="batch",
+                        sync_interval=30.0)
+    r = wal.append_edges(np.asarray([1]), np.asarray([2]), np.asarray([0]),
+                         np.asarray([False]), np.asarray([0.0], np.float32))
+    with wal._io_lock:
+        wal._sync_failed = True            # simulate a failed group commit
+    with pytest.raises(OSError):
+        wal.rotate()
+    with pytest.raises(OSError):
+        wal.sync_upto(r.seq)
+    wal.close()
+    assert wal._durable_seq < r.seq        # close never claimed the tail
+
+
+def test_ack_after_close_is_safe(tmp_path):
+    """Acking a receipt after close() completes cleanly: close fsynced
+    every WAL, so the (inline-fallback) waits see the seqs durable."""
+    g = open_sharded_store(str(tmp_path / "sh"), small_store_cfg(),
+                           n_shards=2, wal_sync="batch",
+                           wal_sync_interval=30.0)
+    r = g.insert_edges([1, 3000], [2, 4])
+    g.close()
+    g.ack(r)
+
+
+def test_inmemory_store_returns_no_seq():
+    g = LSMGraph(small_store_cfg())
+    assert g.insert_edges([1], [2]) is None
+    g.ack(None)                  # harmless
+
+
+def test_sharded_receipt_and_ack(tmp_path):
+    cfg = small_store_cfg()
+    g = open_sharded_store(str(tmp_path / "sh"), cfg, n_shards=3,
+                           wal_sync="batch", wal_sync_interval=30.0)
+    part = g.part
+    # a batch touching only shard 0: receipt names shard 0 alone
+    lo, hi = part.shard_range(0)
+    r0 = g.insert_edges([lo, lo + 1], [hi - 1, lo])
+    assert set(r0.seqs) == {0}
+    # a batch spanning all shards
+    srcs = [part.shard_range(s)[0] for s in range(3)]
+    r_all = g.insert_edges(srcs, [x + 1 for x in srcs])
+    assert set(r_all.seqs) == {0, 1, 2}
+    assert r_all.epoch > r0.epoch
+    g.ack(r0)
+    g.ack(r_all)
+    g.close()
+    g2 = open_sharded_store(str(tmp_path / "sh"))
+    assert g2.n_shards == 3
+    with g2.snapshot() as snap:
+        assert len(snap.edge_set()) == 5
+    g2.close()
+
+
+def test_failed_shard_apply_drains_siblings_before_raising():
+    """One shard's apply failing must propagate AFTER every sibling future
+    completes: the epoch lock never releases with sub-batches in flight,
+    and the store stays usable."""
+    g = ShardedGraphStore(small_store_cfg(), 4)
+    boom_shard = g.shards[1]
+    orig = boom_shard.insert_edges
+    boom_shard.insert_edges = lambda *a, **k: (_ for _ in ()).throw(
+        ValueError("injected shard failure"))
+    lo = [g.part.shard_range(s)[0] for s in range(4)]
+    with pytest.raises(ValueError, match="injected"):
+        g.insert_edges(lo, [x + 1 for x in lo])   # spans all four shards
+    boom_shard.insert_edges = orig
+    with g.snapshot() as snap:                    # no deadlock, no torn pin
+        got = snap.query_edges_batch(lo, [x + 1 for x in lo])
+        assert got.tolist() == [True, False, True, True]
+    g.close()
+
+
+def test_snapshot_readable_after_store_close():
+    """A pinned ShardedSnapshot keeps answering after close() — the
+    single-store contract ('the store stays usable for reads')."""
+    g = ShardedGraphStore(small_store_cfg(), 3)
+    g.insert_edges([1, 2000, 4000], [5, 6, 7])
+    snap = g.snapshot()
+    g.close()
+    got = snap.neighbors_batch(np.array([1, 2000, 4000, 9]))
+    assert [x.tolist() for x in got] == [[5], [6], [7], []]
+    np.testing.assert_array_equal(
+        snap.query_edges_batch([1, 2000], [5, 9]), [True, False])
+    snap.release()
+
+
+def test_torn_shard_meta_is_recreatable(tmp_path):
+    """A crash during the very first create may leave a torn SHARDS.json
+    with no shard dirs: reopening must recreate, not crash.  With shard
+    dirs present, a torn meta refuses to guess."""
+    root = tmp_path / "sh"
+    root.mkdir()
+    (root / "SHARDS.json").write_text('{"n_shards": ')   # torn write
+    g = open_sharded_store(str(root), small_store_cfg(), n_shards=2)
+    g.insert_edges([1], [2])
+    g.close()
+    g2 = open_sharded_store(str(root))                   # clean reopen
+    assert g2.n_shards == 2
+    g2.close()
+    (root / "SHARDS.json").write_text("garbage")
+    with pytest.raises(ValueError):
+        open_sharded_store(str(root))
+
+
+def test_missing_meta_heals_from_shard_dirs(tmp_path):
+    """SHARDS.json lands LAST at create; a crash before it leaves shard
+    dirs without a meta — the no-arg reopen infers the count and heals."""
+    root = tmp_path / "sh"
+    g = open_sharded_store(str(root), small_store_cfg(), n_shards=3)
+    g.insert_edges([1, 2000], [2, 3])
+    g.close()
+    (root / "SHARDS.json").unlink()       # simulate the crash window
+    g2 = open_sharded_store(str(root))
+    assert g2.n_shards == 3
+    with g2.snapshot() as snap:
+        assert snap.query_edges_batch([1, 2000], [2, 3]).all()
+    g2.close()
+    assert (root / "SHARDS.json").exists()  # healed
+
+
+def test_crashed_create_retry_completes_layout(tmp_path):
+    """Retrying the ORIGINAL create (same n_shards) after a mid-create
+    crash completes the empty layout; once data exists, an explicit grown
+    count is refused (it would rewire the partition)."""
+    root = tmp_path / "sh"
+    cfg = small_store_cfg()
+    g = open_sharded_store(str(root), cfg, n_shards=2)  # "half-created":
+    g.close()                                           # no data, and...
+    (root / "SHARDS.json").unlink()                     # ...meta never landed
+    g2 = open_sharded_store(str(root), cfg, n_shards=4)  # retry, larger
+    assert g2.n_shards == 4
+    g2.insert_edges([1, 3500], [2, 4])
+    g2.close()
+    (root / "SHARDS.json").unlink()
+    with pytest.raises(ValueError, match="hold data"):
+        open_sharded_store(str(root), cfg, n_shards=6)  # data present now
+    g3 = open_sharded_store(str(root))                  # no-arg adopt works
+    assert g3.n_shards == 4
+    g3.close()
+
+
+def test_sharded_store_reopen_shard_count_mismatch(tmp_path):
+    cfg = small_store_cfg()
+    g = open_sharded_store(str(tmp_path / "sh"), cfg, n_shards=2)
+    g.close()
+    with pytest.raises(ValueError):
+        open_sharded_store(str(tmp_path / "sh"), cfg, n_shards=4)
+
+
+# ------------------------------------------------------------- mesh router
+_MESH_SCRIPT = r"""
+import jax, json, numpy as np, jax.numpy as jnp
+from repro.launch.mesh import make_shard_mesh
+from repro.shard import RangePartition, make_mesh_write_router
+
+S, V, CAP = 4, 128, 32
+mesh = make_shard_mesh(S)
+part = RangePartition.for_vmax(V, S)
+router = make_mesh_write_router(mesh, part, bucket_cap=CAP)
+rng = np.random.default_rng(1)
+src = rng.integers(0, V, S * 2 * CAP).astype(np.int32)
+dst = rng.integers(0, V, S * 2 * CAP).astype(np.int32)
+prop = rng.random(S * 2 * CAP).astype(np.float32)
+marker = rng.random(S * 2 * CAP) < 0.3
+nv = np.full((S,), 2 * CAP, np.int32)
+rs, rd, rp, rm, rv, drop = router(jnp.asarray(src), jnp.asarray(dst),
+                                  jnp.asarray(prop), jnp.asarray(marker),
+                                  jnp.asarray(nv))
+rs = np.asarray(rs); rm = np.asarray(rm); rv = np.asarray(rv).astype(bool)
+per = len(rs) // S
+owner_ok = all(
+    np.all(rs[i*per:(i+1)*per][rv[i*per:(i+1)*per]] // part.v_local == i)
+    for i in range(S))
+print(json.dumps({
+    "owner_ok": bool(owner_ok),
+    "received": int(rv.sum()),
+    "dropped": int(np.asarray(drop).sum()),
+    "sent": int(S * 2 * CAP),
+    "markers_routed": int(rm[rv].sum()),
+    "markers_sent": int(marker.sum()),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_mesh_write_router_routes_markers():
+    """route_edge_batches_local over a real 4-device mesh: owner rule holds
+    and tombstone markers travel with their edges."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["owner_ok"]
+    assert res["received"] + res["dropped"] == res["sent"]
+    if res["dropped"] == 0:
+        assert res["markers_routed"] == res["markers_sent"]
+    else:
+        assert res["markers_routed"] > 0
+
+
+# ------------------------------------------------- empty-query short-circuits
+def test_empty_query_vectors_short_circuit():
+    """Length-0 query vectors must not walk any visible run and must return
+    correctly-shaped, correctly-dtyped empties (single-store and sharded)."""
+    g = LSMGraph(small_store_cfg())
+    g.insert_edges([1, 2], [3, 4])
+    g.flush_memgraph()
+    with g.snapshot() as snap:
+        resolves = []
+        orig = type(snap)._resolve_batch_chunked
+        try:
+            type(snap)._resolve_batch_chunked = (
+                lambda self, u: resolves.append(len(u)) or orig(self, u))
+            assert snap.neighbors_batch(np.empty(0, np.int64)) == []
+            assert snap.neighbors_batch([], return_props=True) == []
+            qe = snap.query_edges_batch([], [])
+            assert qe.shape == (0,) and qe.dtype == bool
+            deg = snap.degrees_batch([])
+            assert deg.shape == (0,) and deg.dtype == np.int64
+        finally:
+            type(snap)._resolve_batch_chunked = orig
+        assert resolves == [], "empty query still resolved against runs"
+    qe = g.query_edges_batch([], [])
+    assert qe.shape == (0,) and qe.dtype == bool
+
+    sharded = ShardedGraphStore(small_store_cfg(), 3)
+    assert sharded.sharded_neighbors_batch([]) == []
+    qe = sharded.sharded_query_edges_batch([], [])
+    assert qe.shape == (0,) and qe.dtype == bool
+    with sharded.snapshot() as snap:
+        deg = snap.degrees_batch([])
+        assert deg.shape == (0,) and deg.dtype == np.int64
+    sharded.close()
+
+
+def test_query_edges_batch_shape_mismatch_raises():
+    g = LSMGraph(small_store_cfg())
+    with g.snapshot() as snap:
+        with pytest.raises(ValueError):
+            snap.query_edges_batch([1, 2], [3])
+    sharded = ShardedGraphStore(small_store_cfg(), 2)
+    with sharded.snapshot() as snap:
+        with pytest.raises(ValueError):
+            snap.query_edges_batch([1, 2], [3])
+    sharded.close()
