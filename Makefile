@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 tier1-shard test bench
+.PHONY: tier1 tier1-shard test bench bench-smoke
 
 # Fast verification gate: everything except the `slow`-marked end-to-end
 # tests (test_distributed.py spawns an 8-device subprocess mesh,
@@ -20,3 +20,8 @@ test:
 
 bench:
 	$(PY) -m benchmarks.run
+
+# Benchmark bit-rot gate: tiny-scale run of every registered suite;
+# asserts exit 0 + the name,us_per_call,derived row schema (JSON report).
+bench-smoke:
+	BENCH_SMOKE=1 $(PY) -m benchmarks.smoke

@@ -10,7 +10,7 @@ import numpy as np
 
 from repro.kernels import ops, ref
 
-from .common import emit
+from .common import SMOKE, emit
 
 
 def _bench(fn, *args, reps=3):
@@ -26,7 +26,7 @@ def _bench(fn, *args, reps=3):
 def run() -> list:
     rng = np.random.default_rng(0)
     rows = []
-    e, v = 1 << 15, 1 << 12
+    e, v = (1 << 12, 1 << 9) if SMOKE else (1 << 15, 1 << 12)
     seg = jnp.asarray(np.sort(rng.integers(0, v, e)).astype(np.int32))
     dst = jnp.asarray(rng.integers(0, v, e).astype(np.int32))
     wt = jnp.ones((e,), jnp.float32)
@@ -36,7 +36,7 @@ def run() -> list:
     rows.append(("kernel_segsum_pallas", t_k * 1e6, f"E={e}"))
     rows.append(("kernel_segsum_ref", t_r * 1e6, f"E={e}"))
 
-    b, hq, hkv, s, d = 1, 8, 2, 512, 128
+    b, hq, hkv, s, d = (1, 2, 1, 128, 64) if SMOKE else (1, 8, 2, 512, 128)
     q = jnp.asarray(rng.normal(size=(b, hq, s, d)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))
     vv = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))

@@ -8,23 +8,33 @@ populated (every tier participates in every resolve).
 
 Rows: per-vertex and batched cost at 1k and 10k queries; `derived` carries
 the speedup (acceptance: >= 5x at 1000 vertices).
+
+The snapshot-depth sweep (`read_depth*` rows) measures the pipelined read
+path where it lives: batched resolves against 1/2/4/8 visible runs, warm
+(all arrays resident) and evicted-cold (every run dropped to its segment
+file, reloaded through the background prefetcher mid-batch).  Acceptance:
+>= 1.5x vs the pre-pipeline path at depth >= 4.
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 
 import numpy as np
 
 from repro.core import LSMGraph
 
-from .common import V, emit, graph_edges, store_cfg
+from .common import SMOKE, V, emit, graph_edges, store_cfg
 
 
 def _build_store() -> LSMGraph:
     g = LSMGraph(store_cfg())
     src, dst = graph_edges(seed=11)
     g.insert_edges(src, dst)
-    g.flush_memgraph()                # drain: everything compacts into L1+
+    g.flush_memgraph()
+    g.compact_l0()                    # drain: everything compacts into L1+
+    # (explicit — at smoke scale the L0 run limit never auto-triggers)
     rng = np.random.default_rng(12)
     g.insert_edges(rng.integers(0, V, 1 << 11),
                    rng.integers(0, V, 1 << 11))
@@ -36,13 +46,88 @@ def _build_store() -> LSMGraph:
     return g
 
 
+def _depth_store(root: str, n_runs: int):
+    """A durable store with exactly ``n_runs`` visible L0 runs (MemGraph
+    empty, no compaction): every batched resolve touches all of them, and
+    each run has a segment file so it can be evicted cold.  Per-run size is
+    held CONSTANT across the sweep (and below the MemGraph flush threshold,
+    so no auto-flush splits a run) — depth k measures k-run cost at fixed
+    run size, not a bigger store."""
+    import dataclasses
+
+    from repro.storage import open_store
+
+    cfg = dataclasses.replace(store_cfg(), l0_run_limit=n_runs + 64)
+    g = open_store(root, cfg, wal_sync="off")
+    src, dst = graph_edges(seed=31)
+    per = min(cfg.mem_edges - cfg.batch_cap, len(src) // n_runs)
+    for i in range(n_runs):
+        g.insert_edges(src[i * per:(i + 1) * per], dst[i * per:(i + 1) * per])
+        g.flush_memgraph()
+    assert len(g.levels[0]) == n_runs and int(g.mem.ne) == 0
+    return g
+
+
+def _evict_all(g: LSMGraph) -> int:
+    n = 0
+    for lvl in g.levels:
+        for rf in lvl:
+            n += bool(rf.evict())
+    return n
+
+
+def depth_sweep() -> list:
+    """read_depth{k}_{warm,cold} rows: median-of-3 batched resolve against
+    k visible runs.  Warm reps share one snapshot (amortized read spine —
+    the steady-state serving shape); cold reps each pin a FRESH snapshot
+    after evicting every segment, so the resolve pays the full pipeline:
+    prefetched segment reloads + spine merge + annihilation."""
+    rows = []
+    nq = 256 if SMOKE else 4096
+    depths = (1, 2) if SMOKE else (1, 2, 4, 8)
+    reps = 3
+    rng = np.random.default_rng(33)
+    vs = rng.integers(0, V, nq).astype(np.int64)
+    for depth in depths:
+        root = tempfile.mkdtemp(prefix=f"lsmg-bench-depth{depth}-")
+        g = _depth_store(root, depth)
+        try:
+            snap = g.snapshot()
+            snap.neighbors_batch(vs)            # warm jit + arrays + spine
+            warm = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                out = snap.neighbors_batch(vs)
+                warm.append(time.perf_counter() - t0)
+            assert len(out) == nq
+            snap.release()
+            cold = []
+            for _ in range(reps):
+                assert _evict_all(g) == depth, "cold rep measured warm runs"
+                cold_snap = g.snapshot()
+                t0 = time.perf_counter()
+                cold_snap.neighbors_batch(vs)
+                cold.append(time.perf_counter() - t0)
+                cold_snap.release()
+            w, c = sorted(warm)[reps // 2], sorted(cold)[reps // 2]
+            rows.append((f"read_depth{depth}_warm", w * 1e6,
+                         f"qps={nq / w:.0f}"))
+            rows.append((f"read_depth{depth}_cold", c * 1e6,
+                         f"qps={nq / c:.0f};reload_ratio={c / w:.2f}x"))
+        finally:
+            g.close()
+            shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
 def run() -> list:
     g = _build_store()
     snap = g.snapshot()
     rng = np.random.default_rng(13)
     rows = []
-    scalar_sample = 1000  # per-vertex loop cost is per-call; sample suffices
-    for nq in (1000, 10000):
+    # per-vertex loop cost is per-call; a sample suffices
+    scalar_sample = 50 if SMOKE else 1000
+    for nq in ((1000,) if SMOKE else (1000, 10000)):
         vs = rng.integers(0, V, nq).astype(np.int64)
         # warm both paths (jit compile excluded from timing)
         snap.neighbors_scalar(int(vs[0]))
@@ -66,6 +151,7 @@ def run() -> list:
         rows.append((f"read_batched_{nq}", batch_total_s * 1e6,
                      f"speedup={speedup:.1f}x"))
     snap.release()
+    rows.extend(depth_sweep())
     return rows
 
 

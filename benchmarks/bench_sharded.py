@@ -21,18 +21,19 @@ import numpy as np
 from repro.core import LSMGraph
 from repro.shard import ShardedGraphStore
 
-from .common import SCALE, emit, store_cfg
+from .common import SCALE, SMOKE, emit, store_cfg
 
 # Bigger than the single-figure benches: the scaling claim needs the
 # 1-shard store deep enough (L2 cascades, multi-segment levels) that the
 # read tier is record-bound, not dispatch-bound — the regime sharding is
 # for.  8 shards of V/8 = 1000 vertices each still exercise real levels.
-V = 8000
-E = 96000 * SCALE
-INGEST_CHUNK = 4096
-READ_BATCH = 4096
-READ_REPS = 5   # min-of-reps: the 2-core CI box is noisy; min filters
-# scheduler/GC interference out of the scaling signal
+V = 2000 if SMOKE else 8000
+E = (8000 if SMOKE else 96000) * SCALE
+INGEST_CHUNK = 2048 if SMOKE else 4096
+READ_BATCH = 1024 if SMOKE else 4096
+READ_REPS = 1 if SMOKE else 5   # min-of-reps: the 2-core CI box is noisy;
+# min filters scheduler/GC interference out of the scaling signal
+SHARD_COUNTS = (1, 2) if SMOKE else (1, 2, 4, 8)
 
 
 def _cfg():
@@ -123,7 +124,7 @@ def _oracle_identical_under_writes() -> bool:
 def run() -> list:
     rows = []
     base_ing = base_qps = None
-    for n in (1, 2, 4, 8):
+    for n in SHARD_COUNTS:
         g, edges_s = _build_and_ingest(n)
         qps = _read_qps(g)
         g.close()

@@ -4,7 +4,9 @@ Every bench prints ``name,us_per_call,derived`` CSV rows (harness contract).
 `derived` carries the figure-specific metric (edges/s, bytes, ratio...).
 
 Scale defaults fit the 1-core CI container; set BENCH_SCALE=large for the
-paper-shaped runs (x10 edges).
+paper-shaped runs (x10 edges).  BENCH_SMOKE=1 shrinks every suite to a
+seconds-long bit-rot gate (`make bench-smoke`): numbers are meaningless,
+only exit status and row schema matter.
 """
 from __future__ import annotations
 
@@ -14,9 +16,10 @@ from typing import Callable, List, Tuple
 
 import numpy as np
 
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
 SCALE = 10 if os.environ.get("BENCH_SCALE") == "large" else 1
-V = 2000
-E = 30000 * SCALE
+V = 500 if SMOKE else 2000
+E = (6000 if SMOKE else 30000) * SCALE
 
 Row = Tuple[str, float, str]
 

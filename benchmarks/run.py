@@ -2,6 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE=large for paper-shaped
 edge counts.  Individual benches: python -m benchmarks.bench_update etc.
+``benchmarks.smoke`` runs every registered suite at tiny scale as a CI
+bit-rot gate (`make bench-smoke`).
 """
 from __future__ import annotations
 
@@ -10,12 +12,14 @@ import time
 import traceback
 
 
-def main() -> None:
+def suites() -> list:
+    """(label, main) for every registered benchmark — the single registry
+    both the full harness and the smoke gate iterate."""
     from . import (bench_analytics, bench_durability, bench_index,
                    bench_kernels, bench_memcache, bench_mixed,
                    bench_read_batch, bench_sharded, bench_space,
                    bench_update)
-    suites = [
+    return [
         ("fig10/11 updates", bench_update.main),
         ("fig12/13 analytics", bench_analytics.main),
         ("fig14 space", bench_space.main),
@@ -27,9 +31,12 @@ def main() -> None:
         ("durability", bench_durability.main),
         ("sharded scaling", bench_sharded.main),
     ]
+
+
+def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
-    for label, fn in suites:
+    for label, fn in suites():
         t0 = time.time()
         try:
             fn()

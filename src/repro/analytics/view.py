@@ -43,45 +43,50 @@ class CSRView(NamedTuple):
         return jnp.minimum(j, self.n_vertices - 1)
 
 
-def _merge_two_sorted(a, b):
-    """Merge two (src, dst, ts)-sorted record tuples with the Pallas
-    merge-path kernel (kernels/merge.py): O(n) device merge instead of a
-    host lexsort over the concatenation."""
+# Max sources merged on device by _collect_sorted's tournament; deeper
+# snapshots fall back to one host lexsort.  MERGE_STATS counts which branch
+# ran (tests assert zero host lexsorts for any k <= TOURNAMENT_MAX_SOURCES).
+TOURNAMENT_MAX_SOURCES = 8
+MERGE_STATS = {"kernel_merge": 0, "host_lexsort": 0}
+
+
+def _merge_sources_tournament(sources):
+    """Merge k (src, dst, ts)-sorted record tuples with the log-k pairwise
+    merge tournament (kernels/merge.py): device merges instead of a host
+    lexsort over the concatenation.  Sources pad to quantized capacities
+    with all-MAX keys (they sort to the merged tail and are sliced off)."""
     from ..core.csr import quantize_cap
     from ..kernels import ops as kops
-    na, nb = len(a[0]), len(b[0])
-    acap, bcap = quantize_cap(na), quantize_cap(nb)
     i32max = np.iinfo(np.int32).max
-
-    def keys(rec, cap):
-        out = []
-        for col in rec[:3]:
-            p = np.full(cap, i32max, np.int32)
-            p[:len(col)] = col
-            out.append(jnp.asarray(p))
-        return tuple(out)
-
-    perm = np.asarray(kops.merge_perm(keys(a, acap), keys(b, bcap),
-                                      na, nb))[:na + nb]
-    cols = []
-    for ca, cb in zip(a, b):
-        pa = np.zeros(acap, ca.dtype)
-        pa[:na] = ca
-        cols.append(np.concatenate([pa, cb])[perm])
-    return tuple(cols)
+    streams = []
+    for rec in sources:
+        n = len(rec[0])
+        cap = quantize_cap(n)
+        cols = []
+        for j, col in enumerate(rec):
+            fill = i32max if j < 3 else 0
+            p = np.full(cap, fill, col.dtype)
+            p[:n] = col
+            cols.append(jnp.asarray(p))
+        streams.append(tuple(cols))
+    merged = kops.tournament_merge(streams)
+    total = sum(len(rec[0]) for rec in sources)
+    return tuple(np.asarray(c)[:total] for c in merged)
 
 
 def _collect_sorted(snapshot: Snapshot):
     """All visible records, (src, dst, ts)-lexsorted.
 
     CSR runs arrive pre-sorted (fid is not None); MemGraph tiers arrive in
-    arrival order and are sorted individually.  The common 2-source shape
-    (e.g. one L0 run + one L1 segment after a flush) merges on-device with
-    the merge-path kernel; k > 2 sources fall back to one host lexsort
-    (the TPU path would be a bitonic sort, csr._merge_impl)."""
+    arrival order and are sorted individually.  Any 2..TOURNAMENT_MAX_SOURCES
+    pre-sorted sources (deep snapshots included) merge on-device via the
+    log-k tournament of pairwise merge-path passes; beyond that one host
+    lexsort remains (the TPU path would be a bitonic sort, csr._merge_impl).
+    Sources with no record visible at τ are skipped up front — they can
+    only add dead weight to the merge."""
     sources = []
     for (src, dst, ts, marker, prop, fid) in snapshot.all_run_records():
-        if len(src) == 0:
+        if len(src) == 0 or not (ts <= snapshot.tau).any():
             continue
         rec = (np.asarray(src, np.int32), np.asarray(dst, np.int32),
                np.asarray(ts, np.int32), np.asarray(marker, bool),
@@ -95,9 +100,11 @@ def _collect_sorted(snapshot: Snapshot):
         return z, z, z, np.zeros(0, bool), np.zeros(0, np.float32)
     if len(sources) == 1:
         src, dst, ts, marker, prop = sources[0]
-    elif len(sources) == 2:
-        src, dst, ts, marker, prop = _merge_two_sorted(*sources)
+    elif len(sources) <= TOURNAMENT_MAX_SOURCES:
+        MERGE_STATS["kernel_merge"] += 1
+        src, dst, ts, marker, prop = _merge_sources_tournament(sources)
     else:
+        MERGE_STATS["host_lexsort"] += 1
         cat = tuple(np.concatenate([s[i] for s in sources])
                     for i in range(5))
         order = np.lexsort((cat[2], cat[1], cat[0]))
@@ -143,6 +150,12 @@ def multilevel_views(snapshot: Snapshot, *, weighted: bool = False
     out: List[RunView] = []
     for (src, dst, ts, marker, prop, fid) in snapshot.all_run_records():
         vis = ts <= snapshot.tau
+        n_vis = int(vis.sum())
+        if n_vis == 0:
+            # Same empty-tier skip the batched resolve has: a run with no
+            # record visible at τ contributes only zero weights, so every
+            # downstream per-run aggregation kernel would dispatch dead.
+            continue
         base = prop if weighted else np.ones(len(src), np.float32)
         wt = np.where(marker, -base, base) * vis
         # CSR runs (fid set) arrive src-sorted — only MemGraph tiers need
@@ -153,5 +166,5 @@ def multilevel_views(snapshot: Snapshot, *, weighted: bool = False
         out.append(RunView(src=jnp.asarray(src, jnp.int32),
                            dst=jnp.asarray(dst, jnp.int32),
                            wt=jnp.asarray(wt, jnp.float32)))
-        snapshot._store.io.analytics_read += int(vis.sum()) * BYTES_PER_EDGE
+        snapshot._store.io.analytics_read += n_vis * BYTES_PER_EDGE
     return out

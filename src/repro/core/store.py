@@ -17,8 +17,11 @@ partial compaction replaces only overlapping segment files.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -26,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import csr, index as mlindex, memgraph as mg_mod
+from ..kernels import ops as kops
 from .types import (BYTES_PER_EDGE, BYTES_PER_PROP, INVALID_VID, EdgeBatch,
                     IOCounters, MemGraphState, RunFile, StoreConfig, Version)
 from .versions import VersionChain
@@ -33,6 +37,36 @@ from .versions import VersionChain
 
 def _np(x) -> np.ndarray:
     return np.asarray(x)
+
+
+# 0 disables the tournament-merged read backbone entirely (every resolve
+# then takes the legacy concat-then-lexsort path) — an escape hatch, not a
+# tuning knob.
+_READ_TOURNAMENT_MAX_K = int(os.environ.get("LSMG_READ_TOURNAMENT_K", "8"))
+
+# Shared background pool for cold-segment loads: prefetch submissions from
+# the read path overlap disk I/O with device dispatch.  Process-wide and
+# created lazily, so import stays cheap and pure in-memory stores never
+# spawn threads.  Deliberately NARROW by default: a segment load is partly
+# CPU work (CRC, array conversion), so on small hosts extra loader threads
+# fight the XLA compute pool instead of overlapping it — one background
+# loader + the foreground thread already forms the two-stage pipeline.
+_PREFETCH_WORKERS = int(os.environ.get(
+    "LSMG_PREFETCH_WORKERS",
+    str(max(1, min(4, (os.cpu_count() or 2) - 1)))))
+_PREFETCH_POOL: Optional[ThreadPoolExecutor] = None
+_PREFETCH_POOL_LOCK = threading.Lock()
+
+
+def prefetch_pool() -> ThreadPoolExecutor:
+    global _PREFETCH_POOL
+    if _PREFETCH_POOL is None:
+        with _PREFETCH_POOL_LOCK:
+            if _PREFETCH_POOL is None:
+                _PREFETCH_POOL = ThreadPoolExecutor(
+                    max_workers=_PREFETCH_WORKERS,
+                    thread_name_prefix="lsm-prefetch")
+    return _PREFETCH_POOL
 
 
 class LSMGraph:
@@ -511,15 +545,14 @@ def slice_adjacency(offs: np.ndarray, dst: np.ndarray, prop: np.ndarray,
     """Expand a resolved (offsets, dst, prop) adjacency block into the
     per-query result list: element j is the slice for unique vertex
     ``inv[j]``.  Shared by ``Snapshot.neighbors_batch`` and the sharded
-    read tier's cross-shard reassembly."""
-    out = []
-    for i in inv:
-        lo, hi = int(offs[i]), int(offs[i + 1])
-        if return_props:
-            out.append((dst[lo:hi], prop[lo:hi]))
-        else:
-            out.append(dst[lo:hi])
-    return out
+    read tier's cross-shard reassembly.  Pure-Python ints in the hot loop:
+    per-element numpy scalar indexing costs more than the slicing itself
+    at large batch sizes."""
+    offs_l = np.asarray(offs).tolist()
+    if return_props:
+        return [(dst[offs_l[i]:offs_l[i + 1]], prop[offs_l[i]:offs_l[i + 1]])
+                for i in inv.tolist()]
+    return [dst[offs_l[i]:offs_l[i + 1]] for i in inv.tolist()]
 
 
 def _pad(a: np.ndarray, n: int) -> np.ndarray:
@@ -540,6 +573,27 @@ def _range_gaps(lo: int, hi: int,
     if cur < hi:
         gaps.append((cur, hi))
     return gaps
+
+
+@dataclasses.dataclass
+class _ReadBackbone:
+    """The snapshot's merged read spine: every pinned record, tournament-
+    merged ONCE into global (src, dst, ts) order.  The merge keys are
+    query-independent, so the log-k merge cost amortizes over every
+    subsequent batched resolve on the snapshot (RapidStore-style query
+    decoupling) — a resolve then only ranks the query vector into the
+    spine and annihilates.  ``rid`` maps each record to its source run
+    (-1 = MemGraph tier, always visible) for per-query index visibility."""
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    ts: jnp.ndarray
+    rid: jnp.ndarray
+    marker: jnp.ndarray
+    prop: jnp.ndarray
+    dst_np: np.ndarray          # host copies for the output gather
+    prop_np: np.ndarray
+    runs: List[Tuple[RunFile, int]]   # rid order; col < 0 means L0
 
 
 class Snapshot:
@@ -576,6 +630,8 @@ class Snapshot:
         self.runs_by_fid = {r.fid: r
                             for lvl in ([self.l0_runs] + self.level_runs)
                             for r in lvl}
+        self._backbone: Optional[_ReadBackbone] = None
+        self._backbone_lock = threading.Lock()
         self._released = False
 
     def release(self) -> None:
@@ -615,17 +671,21 @@ class Snapshot:
             np.asarray([v], np.int64), return_props=return_props)[0]
 
     def neighbors_batch(self, vs, return_props: bool = False):
-        """Adjacency of every vertex in `vs` at τ in a constant number of
-        jit'd array ops per visible run (paper read workflow, batched).
+        """Adjacency of every vertex in `vs` at τ (paper read workflow,
+        batched and pipelined).
 
-        Pipeline: one `scan_vertices_batch` MemGraph probe per tier, one
-        vectorized multi-level-index gather (`index.lookup_batch`), one
-        record→query mapping pass per visible CSR run
-        (`csr.map_run_to_queries` — the inverse of per-vertex `run_lookup`,
-        so no per-vertex degree cap exists), then a single segmented
-        annihilation: lexsort by (qid, dst, ts), newest-wins, tombstone
-        masking.  Returns a list parallel to `vs` of int64 dst arrays
-        (or (dst, prop) tuples), byte-identical to the scalar path.
+        First resolve on a snapshot: cold segments prefetch on the
+        background pool while MemGraph tiers lexsort individually, then a
+        log-k tournament of pairwise merge-path passes folds every pinned
+        source into the query-independent read spine (`_ReadBackbone`) —
+        CSR runs enter in their native (src, dst, ts) order, unsorted.
+        Every resolve (including the first): one vectorized rank of the
+        spine into the query vector + a vectorized multi-level-index
+        visibility gather (`index.lookup_batch`) + one segmented
+        annihilation (newest visible wins per (src, dst), tombstone
+        masking).  No per-vertex degree cap exists anywhere.  Returns a
+        list parallel to `vs` of int64 dst arrays (or (dst, prop) tuples),
+        byte-identical to the scalar path.
         """
         vs = np.asarray(vs, np.int64).ravel()
         if vs.size == 0:
@@ -647,13 +707,45 @@ class Snapshot:
     # graph resolves stream in bounded memory instead of one |V|-sized spike.
     _BATCH_CHUNK = 1 << 14
 
+    def _prefetch_range(self, lo: int, hi: int) -> int:
+        """Kick background loads for every cold visible run whose vertex
+        range overlaps [lo, hi] — host metadata only, no device sync, so
+        disk I/O overlaps whatever the caller dispatches next.  Conservative
+        superset of the runs a resolve of that range will touch; their
+        ``ensure_loaded`` joins the in-flight load.  Returns the number of
+        loads scheduled."""
+        if hi < lo:
+            return 0
+        n = 0
+        pool = None
+        for rf in self.runs_by_fid.values():
+            if (rf.arrays is None and rf.nv > 0
+                    and rf.max_vid >= lo and rf.min_vid <= hi):
+                if pool is None:
+                    pool = prefetch_pool()
+                n += rf.prefetch(pool)
+        return n
+
     def _resolve_batch_chunked(self, u: np.ndarray):
         if len(u) <= self._BATCH_CHUNK:
             return self._resolve_batch(u)
+        # Uniform chunk padding: the trailing partial chunk resolves at the
+        # same padded query width as the full ones, so every chunk hits one
+        # jit cache entry instead of compiling per distinct tail size.
+        chunk_pad = csr.quantize_cap(self._BATCH_CHUNK, minimum=64)
+        chunks = [u[lo:lo + self._BATCH_CHUNK]
+                  for lo in range(0, len(u), self._BATCH_CHUNK)]
         offs_l, dst_l, prop_l = [np.zeros(1, np.int64)], [], []
         base = 0
-        for lo in range(0, len(u), self._BATCH_CHUNK):
-            offs, dst, prop = self._resolve_batch(u[lo:lo + self._BATCH_CHUNK])
+        for i, cu in enumerate(chunks):
+            if i + 1 < len(chunks) and self._backbone is None:
+                # Double-buffer (legacy / pre-spine): chunk i+1's cold
+                # segments stream in while chunk i dispatches and
+                # annihilates.  Once the backbone exists, chunks never
+                # touch segment arrays again.
+                nxt = chunks[i + 1]
+                self._prefetch_range(int(nxt[0]), int(nxt[-1]))
+            offs, dst, prop = self._resolve_batch(cu, pad_to=chunk_pad)
             offs_l.append(offs[1:] + base)
             dst_l.append(dst)
             prop_l.append(prop)
@@ -661,36 +753,127 @@ class Snapshot:
         return (np.concatenate(offs_l), np.concatenate(dst_l),
                 np.concatenate(prop_l))
 
-    def _resolve_batch(self, u: np.ndarray):
+    def _build_backbone(self) -> _ReadBackbone:
+        """Merge every pinned source into the snapshot's read spine.
+
+        Pipelined: cold segments start loading on the background pool
+        before any device work (their ensure_loaded joins the in-flight
+        load as the merge reaches them); each CSR run enters the tournament
+        in its NATIVE (src, dst, ts) order — no per-run sort — and only
+        MemGraph tiers (arrival-ordered) pay an individual device lexsort.
+        The log-k pairwise tournament then produces one globally sorted
+        record stream, padded to a quantized capacity (src == INVALID_VID
+        pads sort to the tail) so resolve shapes stay jit-cache friendly."""
+        mems = [mg for mg in self.mem_states if int(mg.ne) != 0]
+        # An empty MemGraph tier is skipped outright: it would contribute
+        # only capacity-shaped pad records to the spine.
+        runs: List[Tuple[RunFile, int]] = []
+        for rf in self.l0_runs:
+            if rf.nv > 0:
+                runs.append((rf, -1))
+        for col, lvl in enumerate(self.level_runs):
+            for rf in lvl:
+                if rf.nv > 0:
+                    runs.append((rf, col))
+        pool = None
+        for rf, _col in runs:
+            if rf.arrays is None:
+                pool = pool or prefetch_pool()
+                rf.prefetch(pool)
+        streams = [_mem_backbone_stream(mg) for mg in mems]
+        for i, (rf, _col) in enumerate(runs):
+            streams.append(_run_backbone_stream(
+                rf.ensure_loaded(), jnp.asarray(i, jnp.int32)))
+        if not streams:
+            z = jnp.zeros((0,), jnp.int32)
+            return _ReadBackbone(z, z, z, z, jnp.zeros((0,), bool),
+                                 jnp.zeros((0,), jnp.float32),
+                                 np.zeros(0, np.int32),
+                                 np.zeros(0, np.float32), runs)
+        src, d, t, rid, m, p = kops.tournament_merge(streams)
+        total = int(src.shape[0])
+        cap = csr.quantize_cap(total, half_steps=True)
+        if cap != total:
+            src, d, t, rid, m, p = _pad_backbone(src, d, t, rid, m, p,
+                                                 pad=cap - total)
+        return _ReadBackbone(src, d, t, rid, m, p, _np(d), _np(p), runs)
+
+    def _get_backbone(self) -> _ReadBackbone:
+        if self._backbone is None:
+            with self._backbone_lock:
+                if self._backbone is None:
+                    self._backbone = self._build_backbone()
+        return self._backbone
+
+    def _resolve_batch(self, u: np.ndarray, pad_to: Optional[int] = None):
         """Resolve a SORTED UNIQUE query vector: (offsets[B+1], dst, prop),
-        with dst ascending within each query's slice (scalar-path order)."""
+        with dst ascending within each query's slice (scalar-path order).
+
+        Rides the snapshot's tournament-merged read spine (built once,
+        amortized over every resolve): one vectorized rank of the query
+        vector into the spine + the per-query index-visibility gather +
+        one segmented annihilation (newest visible wins per (src, dst),
+        tombstone hides).  ``LSMG_READ_TOURNAMENT_K=0`` falls back to the
+        legacy per-resolve concat-then-lexsort."""
         B = len(u)
-        bp = csr.quantize_cap(B, minimum=64)
+        bp = pad_to if pad_to is not None else csr.quantize_cap(B, minimum=64)
+        assert bp >= B, "pad_to below query count"
+        lo_q, hi_q = (int(u[0]), int(u[-1])) if B else (0, -1)
+        if self._backbone is None:
+            # Pre-spine only: once the backbone holds the merged records,
+            # evicted segment arrays are never read again on this snapshot
+            # — reloading them would be pure wasted I/O.
+            self._prefetch_range(lo_q, hi_q)
         u_pad = np.full(bp, int(INVALID_VID), np.int64)
         u_pad[:B] = u
         u_j = jnp.asarray(u_pad, jnp.int32)
-        recs: List[Tuple] = []
-        for mg in self.mem_states:
-            if int(mg.ne) == 0:
-                # An empty tier would still contribute B*G + ovf_cap pad
-                # records to the final segmented sort (scan_vertices_batch
-                # is capacity-shaped, not content-shaped) — skip it.
-                continue
-            recs.append(mg_mod.scan_vertices_batch(mg, u_j))
-        n_mem = sum(int(r[0].shape[0]) for r in recs)
-        # Vectorized multi-level-index lookup: all queried vertices at once.
+        if _READ_TOURNAMENT_MAX_K <= 0:
+            return self._resolve_batch_legacy(u, u_j, bp, lo_q, hi_q)
+        bb = self._get_backbone()
+        if bb.src.shape[0] == 0:
+            return (np.zeros(B + 1, np.int64), np.empty(0, np.int64),
+                    np.empty(0, np.float32))
+        # Vectorized multi-level-index lookup -> per-(run, query) visibility.
         first_g, min_g, lvl_fid_g, _ = mlindex.lookup_batch(self.index, u_j)
         first_np, min_np = _np(first_g), _np(min_g)
         lvl_np = _np(lvl_fid_g)
-        lo_q, hi_q = (int(u[0]), int(u[-1])) if B else (0, -1)
+        vis_rows = []
+        for rf, col in bb.runs:
+            if not self.cfg.use_multilevel_index:
+                # Ablation: no index — every segment file is probed
+                # (Fig 16 baseline); rank filtering still applies.
+                vis_rows.append(np.ones(bp, bool))
+            elif col < 0:
+                vis_rows.append(
+                    (rf.fid >= min_np)
+                    & ((first_np == INVALID_VID) | (rf.fid >= first_np)))
+            else:
+                vis_rows.append(lvl_np[:, col] == rf.fid)
+        vis_mat = (np.stack(vis_rows) if vis_rows
+                   else np.zeros((1, bp), bool))
+        qid, live, n_run = _backbone_resolve(
+            bb.src, bb.dst, bb.ts, bb.rid, bb.marker, u_j,
+            jnp.asarray(vis_mat), jnp.asarray(self.tau, jnp.int32),
+            jnp.asarray(B, jnp.int32))
+        return self._finish_resolve(qid, bb.dst_np, bb.prop_np,
+                                    live, int(n_run), B)
+
+    def _resolve_batch_legacy(self, u, u_j, bp, lo_q, hi_q):
+        """Per-resolve concat + one segmented lexsort (the pre-backbone
+        read path, kept behind LSMG_READ_TOURNAMENT_K=0)."""
+        B = len(u)
+        mems = [mg for mg in self.mem_states if int(mg.ne) != 0]
+        first_g, min_g, lvl_fid_g, _ = mlindex.lookup_batch(self.index, u_j)
+        first_np, min_np = _np(first_g), _np(min_g)
+        lvl_np = _np(lvl_fid_g)
+        runs: List[Tuple[RunFile, Optional[np.ndarray]]] = []
         for rf in self.l0_runs:
             if rf.nv == 0 or rf.max_vid < lo_q or rf.min_vid > hi_q:
                 continue
             vis = ((rf.fid >= min_np)
                    & ((first_np == INVALID_VID) | (rf.fid >= first_np)))
             if vis[:B].any():
-                recs.append(_run_query_records(
-                    rf.ensure_loaded(), u_j, jnp.asarray(vis)))
+                runs.append((rf, vis))
         if self.cfg.use_multilevel_index:
             for col, lvl in enumerate(self.level_runs):
                 for rf in lvl:
@@ -698,28 +881,50 @@ class Snapshot:
                         continue
                     vis = lvl_np[:, col] == rf.fid
                     if vis[:B].any():
-                        recs.append(_run_query_records(
-                            rf.ensure_loaded(), u_j, jnp.asarray(vis)))
+                        runs.append((rf, vis))
         else:
-            # Ablation: no index — every overlapping segment file is probed
-            # (Fig 16 baseline), still one vectorized pass per file.
-            all_vis = jnp.ones((bp,), bool)
             for lvl in self.level_runs:
                 for rf in lvl:
                     if rf.nv == 0 or rf.max_vid < lo_q or rf.min_vid > hi_q:
                         continue
-                    recs.append(_run_query_records(
-                        rf.ensure_loaded(), u_j, all_vis))
-        if not recs:
+                    runs.append((rf, None))
+        if not mems and not runs:
             return (np.zeros(B + 1, np.int64), np.empty(0, np.int64),
                     np.empty(0, np.float32))
+        all_vis = np.ones(bp, bool)
+        q, d, p, live, n_run = self._merge_lexsort(
+            mems, runs, u_j, all_vis, jnp.asarray(self.tau, jnp.int32),
+            jnp.asarray(B, jnp.int32))
+        return self._finish_resolve(q, _np(d), _np(p), live, int(n_run), B)
+
+    def _finish_resolve(self, qid, dst_np, prop_np, live, n_run: int, B: int):
+        """Shared resolve epilogue: byte accounting + live-record gather +
+        per-query offsets (kept single-sourced so the legacy escape hatch
+        can never diverge from the spine path)."""
+        self._store.io.analytics_read += n_run * (
+            BYTES_PER_EDGE + BYTES_PER_PROP)
+        live = _np(live)
+        ql = _np(qid)[live]
+        dl = dst_np[live].astype(np.int64)
+        pl = prop_np[live].astype(np.float32)
+        offs = np.searchsorted(ql, np.arange(B + 1))
+        return offs, dl, pl
+
+    def _merge_lexsort(self, mems, runs, u_j, all_vis, tau_j, nq_j):
+        """Legacy merge: concat every source and run one segmented lexsort."""
+        recs = [mg_mod.scan_vertices_batch(mg, u_j) for mg in mems]
+        n_mem = sum(int(r[0].shape[0]) for r in recs)
+        for rf, vis in runs:
+            recs.append(_run_query_records(
+                rf.ensure_loaded(), u_j,
+                jnp.asarray(all_vis if vis is None else vis)))
         qid = jnp.concatenate([r[0] for r in recs])
         dstc = jnp.concatenate([r[1] for r in recs])
         tsc = jnp.concatenate([r[2] for r in recs])
         mkc = jnp.concatenate([r[3] for r in recs])
         prc = jnp.concatenate([r[4] for r in recs])
         total = int(qid.shape[0])
-        # Half-step buckets: the concat feeds the lexsort, the read path's
+        # Half-step buckets: the concat feeds the lexsort, this path's
         # dominant (pad-length-linear) cost.
         cap = csr.quantize_cap(total, half_steps=True)
         if cap != total:
@@ -731,17 +936,9 @@ class Snapshot:
             mkc = jnp.concatenate([mkc, jnp.zeros((pad,), bool)])
             prc = jnp.concatenate([prc, jnp.zeros((pad,), jnp.float32)])
         q, d, p, live, n_run = _annihilate_batch(
-            qid, dstc, tsc, mkc, prc,
-            jnp.asarray(self.tau, jnp.int32), jnp.asarray(B, jnp.int32),
+            qid, dstc, tsc, mkc, prc, tau_j, nq_j,
             jnp.asarray(n_mem, jnp.int32))
-        self._store.io.analytics_read += int(n_run) * (
-            BYTES_PER_EDGE + BYTES_PER_PROP)
-        live = _np(live)
-        ql = _np(q)[live]
-        dl = _np(d)[live].astype(np.int64)
-        pl = _np(p)[live].astype(np.float32)
-        offs = np.searchsorted(ql, np.arange(B + 1))
-        return offs, dl, pl
+        return q, d, p, live, int(n_run)
 
     def neighbors_scalar(self, v: int, return_props: bool = False):
         """Reference per-vertex read path: MemGraph first, then L0 runs with
@@ -871,6 +1068,67 @@ def _annihilate_batch(qid, dst, ts, marker, prop, tau, nq, run_from):
     last = last.at[-1].set(True)
     live = last & ~m & (q < nq)
     return q, d, p, live, n_run
+
+
+@jax.jit
+def _run_backbone_stream(run: csr.CSRRunArrays, rid: jnp.ndarray):
+    """One CSR run as a backbone stream: (src, dst, ts, rid, marker, prop),
+    sorted by construction — a run is natively (src, dst, ts)-ordered and
+    pad slots carry src == INVALID_VID, so NO per-stream sort happens."""
+    src = csr._expand_src(run)
+    return (src, run.dst, run.ts, jnp.broadcast_to(rid, src.shape),
+            run.marker, run.prop)
+
+
+@jax.jit
+def _mem_backbone_stream(mg: MemGraphState):
+    """One MemGraph tier as a backbone stream (rid = -1: always visible).
+    Arrival-ordered, so this stream (alone) pays a per-tier device lexsort;
+    invalid slots already carry src == INVALID_VID and sort to the tail."""
+    src, dst, ts, marker, prop, _n = mg_mod.flush_arrays(mg)
+    order = jnp.lexsort((ts, dst, src))
+    rid = jnp.full(src.shape, -1, jnp.int32)
+    return (src[order], dst[order], ts[order], rid,
+            marker[order], prop[order])
+
+
+@functools.partial(jax.jit, static_argnames=("pad",))
+def _pad_backbone(src, dst, ts, rid, marker, prop, pad: int):
+    return (jnp.concatenate([src, jnp.full((pad,), INVALID_VID, jnp.int32)]),
+            jnp.concatenate([dst, jnp.zeros((pad,), jnp.int32)]),
+            jnp.concatenate([ts, jnp.zeros((pad,), jnp.int32)]),
+            jnp.concatenate([rid, jnp.full((pad,), -1, jnp.int32)]),
+            jnp.concatenate([marker, jnp.zeros((pad,), bool)]),
+            jnp.concatenate([prop, jnp.zeros((pad,), jnp.float32)]))
+
+
+@jax.jit
+def _backbone_resolve(src, dst, ts, rid, marker, u, vis_mat, tau, nq):
+    """Resolve one query batch against the merged spine: rank every record
+    into the query vector (one searchsorted over the spine), gather its
+    per-(run, query) visibility, then segmented annihilation — per
+    (src, dst) group the newest ALIVE record wins (segmented max of alive
+    positions; dead records stay in place) and a tombstone winner hides
+    the edge.  Also returns the queried-record count (pre-τ visibility,
+    scalar-parity byte accounting)."""
+    B = u.shape[0]
+    n = src.shape[0]
+    j = jnp.searchsorted(u, src).astype(jnp.int32)
+    j_c = jnp.minimum(j, B - 1)
+    hit = (u[j_c] == src) & (src != INVALID_VID)
+    rid_c = jnp.clip(rid, 0, vis_mat.shape[0] - 1)
+    queried = hit & ((rid < 0) | vis_mat[rid_c, j_c])
+    alive = queried & (ts <= tau)
+    qid = jnp.where(hit, j_c, B)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    new_grp = (src != jnp.roll(src, 1)) | (dst != jnp.roll(dst, 1))
+    new_grp = new_grp.at[0].set(True)
+    gid = jnp.cumsum(new_grp.astype(jnp.int32)) - 1
+    winner = jax.ops.segment_max(jnp.where(alive, idx, -1), gid,
+                                 num_segments=n)
+    live = alive & (idx == winner[gid]) & ~marker & (qid < nq)
+    n_run = jnp.sum(queried & (rid >= 0), dtype=jnp.int32)
+    return qid, live, n_run
 
 
 def _run_records(rf: RunFile, min_fid_filter: bool):

@@ -89,6 +89,9 @@ class RunFile:
     # segment file.
     _load_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False)
+    # Best-effort dedup of in-flight background loads; races are benign
+    # (ensure_loaded serializes the actual load on _load_lock).
+    _prefetching: bool = dataclasses.field(default=False, repr=False)
 
     @property
     def nbytes(self) -> int:
@@ -110,6 +113,33 @@ class RunFile:
                 a = self.loader()
                 self.arrays = a
         return a
+
+    def prefetch(self, executor) -> bool:
+        """Async counterpart of ``ensure_loaded``: start materializing
+        ``arrays`` on ``executor`` if the run is cold.  The background load
+        serializes with foreground loads/evicts on ``_load_lock``, so a
+        concurrent ``ensure_loaded`` simply joins it.  A failed background
+        load leaves the run cold — the error then surfaces on the next
+        foreground ``ensure_loaded`` instead of vanishing into the pool.
+        Returns True iff a load was scheduled."""
+        if self.arrays is not None or self.loader is None or self._prefetching:
+            return False
+        self._prefetching = True
+
+        def _load() -> None:
+            try:
+                self.ensure_loaded()
+            except Exception:
+                pass
+            finally:
+                self._prefetching = False
+
+        try:
+            executor.submit(_load)
+        except RuntimeError:      # pool shut down: foreground load covers it
+            self._prefetching = False
+            return False
+        return True
 
     def evict(self) -> bool:
         """Drop the in-RAM arrays if a disk copy exists.  Returns True if

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: merge-path two-way sorted merge (compaction fast path).
+"""Pallas TPU kernel: merge-path sorted merges (read + compaction fast path).
 
 Compaction's k-way merge defaults to concat+bitonic-sort (csr.merge_runs) —
 the TPU-native choice for k > 2.  For the common 2-run case (partial
@@ -14,10 +14,21 @@ classical merge-path algorithm, O(n) work instead of O(n log n):
 
 Keys are (k1, k2, k3) = (src, dst, ts) compared lexicographically — no 64-bit
 packing needed (TPUs have no native int64).
+
+On top of the two-way primitive sit ``merge_streams`` (one pairwise merge of
+whole record streams, payload included) and ``tournament_merge`` (a log-k
+tournament of pairwise passes): k pre-sorted sources merge on device with no
+host lexsort — the deep-snapshot read path and the analytics collect both
+ride it.  ``merge_streams`` has two backends: the Pallas merge-path kernel
+above, and a pure-jnp cross-rank merge (A[i]'s output position = i + its
+lexicographic rank in B; payload applied by gathers only, since XLA CPU
+scatters lower to a serial loop) — the fast path where Pallas would run in
+interpret mode.
 """
 from __future__ import annotations
 
 import functools
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +57,7 @@ def lex_searchsorted(keys_a, q1, q2, q3, n_keys, *, side: str):
 
     def body(_, state):
         lo, hi = state
+        open_ = lo < hi  # converged lanes must not move (fixed-step loop)
         mid = (lo + hi) // 2
         m = jnp.clip(mid, 0, n - 1)
         a1, a2, a3 = k1[m], k2[m], k3[m]
@@ -53,12 +65,17 @@ def lex_searchsorted(keys_a, q1, q2, q3, n_keys, *, side: str):
             go_right = _lex_less(a1, a2, a3, q1, q2, q3, strict=True)
         else:
             go_right = _lex_less(a1, a2, a3, q1, q2, q3, strict=False)
+        go_right = go_right & open_
         lo = jnp.where(go_right, mid + 1, lo)
-        hi = jnp.where(go_right, hi, mid)
+        hi = jnp.where(go_right | ~open_, hi, mid)
         return lo, hi
 
-    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
-    return lo
+    # Static step count: unroll at trace time — an XLA while loop pays
+    # per-iteration dispatch overhead that dwarfs the O(n) body on CPU.
+    state = (lo, hi)
+    for i in range(steps):
+        state = body(i, state)
+    return state[0]
 
 
 def _merge_kernel(asplit_ref, bsplit_ref,
@@ -167,3 +184,65 @@ def merge_perm(a_keys, b_keys, na, nb, *, interpret: bool = False):
     )(a_split, b_split, a1, a2, a3, b1, b2, b3,
       na[None], nb[None]).reshape(-1)[:cap]
     return perm
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def merge_streams(a_cols: Tuple[jnp.ndarray, ...],
+                  b_cols: Tuple[jnp.ndarray, ...], *,
+                  use_pallas: bool = False, interpret: bool = False):
+    """Merge two sorted record streams into one, payload included.
+
+    ``a_cols``/``b_cols``: tuples whose first three columns are the int32
+    lexicographic sort keys; remaining columns are payload of any dtype.
+    Every slot participates (capacity == validity): pad records must carry
+    key columns that sort to the tail (e.g. all INT32_MAX).  Returns the
+    merged column tuple of length len(a) + len(b).
+    """
+    if use_pallas:
+        na, nb = a_cols[0].shape[0], b_cols[0].shape[0]
+        perm = merge_perm(a_cols[:3], b_cols[:3],
+                          jnp.asarray(na, jnp.int32),
+                          jnp.asarray(nb, jnp.int32), interpret=interpret)
+        return tuple(jnp.concatenate([ca, cb])[perm]
+                     for ca, cb in zip(a_cols, b_cols))
+    # Gather-only payload application (XLA CPU scatters lower to a serial
+    # loop; gathers vectorize).  pos_a is strictly increasing, so for every
+    # output slot o the count of A-elements among outputs [0, o] is
+    # ca = searchsorted(pos_a, o, right); slot o holds A[ca-1] iff that
+    # element's position IS o, else B[o - ca].
+    a1, a2, a3 = a_cols[:3]
+    b1, b2, b3 = b_cols[:3]
+    na, nb = a1.shape[0], b1.shape[0]
+    ra = lex_searchsorted((b1, b2, b3), a1, a2, a3, nb, side="left")
+    pos_a = jnp.arange(na, dtype=jnp.int32) + ra
+    o = jnp.arange(na + nb, dtype=jnp.int32)
+    ca = jnp.searchsorted(pos_a, o, side="right").astype(jnp.int32)
+    ia = jnp.clip(ca - 1, 0, na - 1)
+    from_a = (ca > 0) & (pos_a[ia] == o)
+    ib = jnp.clip(o - ca, 0, nb - 1)
+    return tuple(jnp.where(from_a, cca[ia], ccb[ib])
+                 for cca, ccb in zip(a_cols, b_cols))
+
+
+def tournament_merge(streams: Sequence[Tuple[jnp.ndarray, ...]], *,
+                     use_pallas: bool = False, interpret: bool = False):
+    """log-k tournament of pairwise merge-path passes over k sorted streams.
+
+    Adjacent streams pair per round; an odd straggler advances unmerged.
+    Pairing is order-preserving and each pairwise pass is stable (A's ties
+    first), so the tournament as a whole is stable: records with equal keys
+    come out in stream order, byte-identical to a stable lexsort of the
+    concatenation.  Host-level loop — each round's merges are independent
+    device dispatches.
+    """
+    streams = list(streams)
+    if not streams:
+        raise ValueError("tournament_merge needs at least one stream")
+    while len(streams) > 1:
+        nxt = [merge_streams(streams[i], streams[i + 1],
+                             use_pallas=use_pallas, interpret=interpret)
+               for i in range(0, len(streams) - 1, 2)]
+        if len(streams) % 2:
+            nxt.append(streams[-1])
+        streams = nxt
+    return streams[0]

@@ -15,7 +15,9 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention as _flash
 from .lookup import batched_searchsorted as _search
-from .merge import lex_searchsorted, merge_perm as _merge_perm
+from .merge import (lex_searchsorted, merge_perm as _merge_perm,
+                    merge_streams as _merge_streams,
+                    tournament_merge as _tournament_merge)
 from .segment_reduce import (gather_segmin as _gather_segmin,
                              gather_segsum as _gather_segsum)
 
@@ -54,6 +56,28 @@ def merge_perm(a_keys, b_keys, na, nb, *, use_pallas: bool = True):
     return _merge_perm(a_keys, b_keys, na, nb, interpret=default_interpret())
 
 
+def merge_streams(a_cols, b_cols, *, use_pallas=None):
+    """One pairwise sorted-stream merge, payload included (see
+    kernels/merge.py).  Backend default: the Pallas merge-path kernel on a
+    real TPU, the pure-jnp cross-rank gather merge where Pallas would only
+    run in interpret mode (CPU) — identical output either way."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    return _merge_streams(tuple(a_cols), tuple(b_cols),
+                          use_pallas=use_pallas,
+                          interpret=default_interpret())
+
+
+def tournament_merge(streams, *, use_pallas=None):
+    """log-k tournament of pairwise merges over k sorted record streams —
+    the k>2 generalization of ``merge_perm`` (ROADMAP "Kernel-merge k>2")."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    return _tournament_merge([tuple(s) for s in streams],
+                             use_pallas=use_pallas,
+                             interpret=default_interpret())
+
+
 def batched_searchsorted(keys, queries, n_keys, *, use_pallas: bool = True):
     """Batched binary search (no-index ablation probe / L0 probes)."""
     if not use_pallas:
@@ -71,6 +95,6 @@ def attention(q, k, v, *, causal: bool = True, scale=None,
                   interpret=default_interpret())
 
 
-__all__ = ["gather_segsum", "gather_segmin", "merge_perm",
-           "batched_searchsorted", "attention", "lex_searchsorted",
-           "default_interpret"]
+__all__ = ["gather_segsum", "gather_segmin", "merge_perm", "merge_streams",
+           "tournament_merge", "batched_searchsorted", "attention",
+           "lex_searchsorted", "default_interpret"]

@@ -134,6 +134,16 @@ class ShardedSnapshot:
             hi_i = int(np.searchsorted(uniq, r_hi))
             if hi_i > lo_i:
                 slices.append((s, lo_i, hi_i))
+        # Kick EVERY shard's cold-segment loads onto the shared prefetch
+        # pool before the first resolve dispatches: a late shard in the
+        # fan-out order has its segments resident (or in flight) by the
+        # time a worker reaches it, instead of paying the load serially in
+        # router order.  Shards whose read spine is already built never
+        # touch segment arrays again — skip those.
+        for (s, lo_i, hi_i) in slices:
+            if self.snaps[s]._backbone is None:
+                self.snaps[s]._prefetch_range(int(uniq[lo_i]),
+                                              int(uniq[hi_i - 1]))
         results = self._map_shards(
             [(self.snaps[s]._resolve_batch_chunked, (uniq[lo_i:hi_i],))
              for (s, lo_i, hi_i) in slices])

@@ -100,6 +100,7 @@ class DurableStorage:
 
     def make_loader(self, path: str):
         def load():
+            seg_mod.advise_willneed(path)  # kernel readahead under the load
             meta, run = seg_mod.read_segment(path)
             if self.store is not None:
                 self.store.io.segment_read += (
