@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 tier1-shard test bench bench-smoke
+.PHONY: tier1 tier1-shard test bench bench-smoke chaos-smoke
 
 # Fast verification gate: everything except the `slow`-marked end-to-end
 # tests (test_distributed.py spawns an 8-device subprocess mesh,
@@ -25,3 +25,10 @@ bench:
 # asserts exit 0 + the name,us_per_call,derived row schema (JSON report).
 bench-smoke:
 	BENCH_SMOKE=1 $(PY) -m benchmarks.smoke
+
+# Fault-injection gate: a fixed-seed batch of randomized fault schedules
+# (failed fsyncs, torn WAL writes, read EIO, segment bit-flips) through the
+# durability invariants — acked writes survive reopen, reads fail typed.
+# Fixed seeds keep it deterministic and under ~30s.
+chaos-smoke:
+	$(PY) -m repro.storage.chaostest --schedules 12 --seed 0

@@ -38,9 +38,14 @@ class ConcurrentLSMGraph:
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
         self._compact_request = threading.Event()
-        self._writer = threading.Thread(target=self._writer_loop, daemon=True)
+        # Current work item per background thread, for close()'s leak
+        # report: when a join times out, naming what the thread is stuck on
+        # ("flush_memgraph", "insert batch of 4096") beats a silent leak.
+        self._busy = {"writer": None, "compactor": None}
+        self._writer = threading.Thread(target=self._writer_loop, daemon=True,
+                                        name="lsmg-writer")
         self._compactor = threading.Thread(
-            target=self._compactor_loop, daemon=True)
+            target=self._compactor_loop, daemon=True, name="lsmg-compactor")
         self._writer.start()
         self._compactor.start()
 
@@ -69,11 +74,29 @@ class ConcurrentLSMGraph:
             time.sleep(0.01)
         self._check()
 
+    # Join budgets, overridable for tests (a wedged-thread test should not
+    # take 70 s to prove the leak is reported).
+    _WRITER_JOIN_TIMEOUT = 10.0
+    _COMPACTOR_JOIN_TIMEOUT = 60.0
+
     def close(self) -> None:
         self.flush()
         self._stop.set()
-        self._writer.join(timeout=10)
-        self._compactor.join(timeout=60)
+        self._writer.join(timeout=self._WRITER_JOIN_TIMEOUT)
+        self._compactor.join(timeout=self._COMPACTOR_JOIN_TIMEOUT)
+        # join(timeout=) returns None either way — check is_alive() or a
+        # wedged thread silently leaks past close() while holding the store
+        # lock / WAL handles its successor will need.
+        leaked = [(name, thread, self._busy.get(name))
+                  for name, thread in (("writer", self._writer),
+                                       ("compactor", self._compactor))
+                  if thread.is_alive()]
+        if leaked:
+            detail = "; ".join(
+                f"{name} thread still alive after join timeout"
+                + (f" (stuck on: {work})" if work else "")
+                for name, _t, work in leaked)
+            raise RuntimeError(f"close() leaked background threads: {detail}")
         self.store.close()  # durable: fsync WAL tail + release handles
         self._check()
 
@@ -91,6 +114,7 @@ class ConcurrentLSMGraph:
                 continue
             try:
                 op, src, dst, prop = item
+                self._busy["writer"] = f"{op} batch of {len(src)}"
                 # Apply without triggering inline flush: the compactor owns
                 # flush+compaction so the writer returns to ingest quickly.
                 store._apply_no_flush(src, dst, prop, delete=(op == "delete"))
@@ -102,6 +126,7 @@ class ConcurrentLSMGraph:
                 self._error = e
                 self._stop.set()
             finally:
+                self._busy["writer"] = None
                 self._q.task_done()
 
     def _compactor_loop(self) -> None:
@@ -113,6 +138,7 @@ class ConcurrentLSMGraph:
                 # Poll regardless of the signal: the writer may be blocked
                 # mid-item on a hard-full cache waiting for exactly this.
                 if mg_mod.memgraph_should_flush(store.mem, store.cfg):
+                    self._busy["compactor"] = "flush_memgraph"
                     store.flush_memgraph()  # includes L0 compaction + cascade
                 # Durable stores: WAL group-commit fsync runs on the WAL's
                 # own background thread (wal.py), off the writer's critical
@@ -122,3 +148,5 @@ class ConcurrentLSMGraph:
                 traceback.print_exc()
                 self._error = e
                 self._stop.set()
+            finally:
+                self._busy["compactor"] = None

@@ -285,7 +285,7 @@ class LSMGraph:
             min_v, max_v = 0, -1
         rf = RunFile(fid=self._new_fid(), level=level, arrays=run,
                      min_vid=min_v, max_vid=max_v, created_ts=self._ts,
-                     nv=nv, ne=ne)
+                     nv=nv, ne=ne, io=self.io)
         self.runs_by_fid[rf.fid] = rf
         return rf
 
@@ -518,6 +518,17 @@ class LSMGraph:
         if commit_seq is not None and self.durability is not None:
             self.durability.sync_upto(commit_seq)
 
+    def degraded_ranges(self) -> tuple:
+        """Vertex ranges whose on-disk data is quarantined/unreadable
+        (``storage.errors.DegradedRange`` tuples).  Empty for in-memory
+        stores and healthy durable stores.  Queries overlapping a degraded
+        range raise a typed ``CorruptionError`` instead of returning
+        silently-incomplete adjacency."""
+        if self.durability is not None and \
+                hasattr(self.durability, "degraded_ranges"):
+            return self.durability.degraded_ranges()
+        return ()
+
     def close(self) -> None:
         """Flush WAL buffers and release file handles.  The store stays
         usable for reads but further writes are undefined; reopen via
@@ -611,6 +622,12 @@ class Snapshot:
         # Pin array references NOW — later store mutations are invisible.
         self.index = store.index
         self.mem_states: List[MemGraphState] = []
+        # Degraded ranges pinned at snapshot time: runs whose file was
+        # quarantined are excluded from the pin (their arrays are gone and
+        # unreloadable); queries overlapping their vertex ranges raise a
+        # typed error instead of silently missing edges.
+        self.degraded = store.degraded_ranges()
+        bad_fids = {r.fid for r in self.degraded}
         with store._lock:
             if store.mem_id in version.memgraph_ids:
                 self.mem_states.append(store.mem)
@@ -619,9 +636,10 @@ class Snapshot:
                 self.mem_states.append(store.mem_full)
             self.l0_runs: List[RunFile] = [
                 store.runs_by_fid[f] for f in version.l0_fids
-                if f in store.runs_by_fid]
+                if f in store.runs_by_fid and f not in bad_fids]
             self.level_runs: List[List[RunFile]] = [
-                list(lvl) for lvl in store.levels[1:]]
+                [r for r in lvl if r.fid not in bad_fids]
+                for lvl in store.levels[1:]]
         # Evicted (durable, cold) segments stay cold at pin time: every read
         # path materializes lazily via ensure_loaded, and a run's file can't
         # vanish under a pin — compaction re-materializes the runs it removes
@@ -691,6 +709,7 @@ class Snapshot:
         if vs.size == 0:
             return []
         uniq, inv = np.unique(vs, return_inverse=True)
+        self._check_degraded(uniq)
         if len(uniq) == 1:
             # Point-read fast path: a 1-vertex batch would still scan every
             # visible run's full record array; the scalar slice-gather path
@@ -701,6 +720,26 @@ class Snapshot:
             return [one] * len(vs)
         offs, dst, prop = self._resolve_batch_chunked(uniq)
         return slice_adjacency(offs, dst, prop, inv, return_props)
+
+    def degraded_overlap(self, u) -> tuple:
+        """The pinned degraded ranges that ``u``'s vertices actually touch
+        (exact per-vid check, not a bounding-box one)."""
+        if not self.degraded:
+            return ()
+        u = np.asarray(u)
+        return tuple(r for r in self.degraded
+                     if bool(((u >= r.lo) & (u <= r.hi)).any()))
+
+    def _check_degraded(self, u) -> None:
+        hit = self.degraded_overlap(u)
+        if hit:
+            # Runtime-only import: storage imports core at module load, so
+            # the reverse edge must stay out of import time.
+            from ..storage.errors import CorruptionError
+            raise CorruptionError(
+                "query touches degraded vertex range(s) "
+                + ", ".join(f"[{r.lo}, {r.hi}] (fid {r.fid})" for r in hit),
+                ranges=hit)
 
     # Bound on unique vertices per device resolve: caps the (chunk, seg_size)
     # MemGraph gather and the final sort buffer, so edge_set()-style whole-
@@ -945,6 +984,7 @@ class Snapshot:
         fid >= max(first, min readable fid), then one (fid, offset) per L1+
         level from the multi-level index (paper read workflow).  Kept as the
         equivalence oracle and benchmark baseline for `neighbors_batch`."""
+        self._check_degraded(np.asarray([v]))
         recs: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
         cap = self.cfg.seg_size + self.cfg.ovf_cap  # max cacheable degree
         for mg in self.mem_states:

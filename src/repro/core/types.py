@@ -9,7 +9,9 @@ Design rules (see DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
+import time
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
@@ -84,6 +86,9 @@ class RunFile:
     path: Optional[str] = None
     loader: Optional[Callable[[], CSRRunArrays]] = dataclasses.field(
         default=None, repr=False)
+    # Store-level I/O counters for retry accounting (set by the owning
+    # store; None for standalone RunFiles).
+    io: Optional["IOCounters"] = dataclasses.field(default=None, repr=False)
     # Orders load vs evict vs the compaction-commit re-materialize+unlink:
     # without it a reader past its None-check could open an already-deleted
     # segment file.
@@ -97,10 +102,19 @@ class RunFile:
     def nbytes(self) -> int:
         return self.ne * (BYTES_PER_EDGE + BYTES_PER_PROP)
 
-    def ensure_loaded(self) -> CSRRunArrays:
+    def ensure_loaded(self, _retry_counter: str = "read_retries"
+                      ) -> CSRRunArrays:
         """Materialize ``arrays`` (no-op when resident).  Returns a local
         reference, so a concurrent ``evict`` cannot null it between the
-        check and the caller's use."""
+        check and the caller's use.
+
+        Transient loader failures (duck-typed: the exception carries
+        ``transient = True``, e.g. an EIO on a cold segment read) are
+        retried with bounded exponential backoff + wall-clock deadline;
+        each retry bumps ``io.<_retry_counter>``.  Corruption and other
+        non-transient errors propagate on the first attempt.  The retry
+        lives HERE — once, under the load lock — so foreground loads and
+        background prefetch cannot stack retries multiplicatively."""
         a = self.arrays
         if a is not None:
             return a
@@ -110,17 +124,41 @@ class RunFile:
                 if self.loader is None:
                     raise RuntimeError(
                         f"RunFile fid={self.fid} has no arrays and no loader")
-                a = self.loader()
+                a = self._load_with_retry(_retry_counter)
                 self.arrays = a
         return a
+
+    def _load_with_retry(self, counter_attr: str) -> CSRRunArrays:
+        attempts = int(os.environ.get("LSMG_IO_RETRIES", "3"))
+        base = float(os.environ.get("LSMG_IO_RETRY_BASE", "0.002"))
+        budget = float(os.environ.get("LSMG_IO_RETRY_DEADLINE", "2.0"))
+        deadline = time.monotonic() + budget
+        delay = base
+        attempt = 0
+        while True:
+            try:
+                return self.loader()
+            except Exception as e:
+                attempt += 1
+                if (not getattr(e, "transient", False)
+                        or attempt >= attempts
+                        or time.monotonic() + delay > deadline):
+                    raise
+                if self.io is not None:
+                    setattr(self.io, counter_attr,
+                            getattr(self.io, counter_attr) + 1)
+                time.sleep(delay)
+                delay = min(delay * 2, 0.1)
 
     def prefetch(self, executor) -> bool:
         """Async counterpart of ``ensure_loaded``: start materializing
         ``arrays`` on ``executor`` if the run is cold.  The background load
         serializes with foreground loads/evicts on ``_load_lock``, so a
-        concurrent ``ensure_loaded`` simply joins it.  A failed background
-        load leaves the run cold — the error then surfaces on the next
-        foreground ``ensure_loaded`` instead of vanishing into the pool.
+        concurrent ``ensure_loaded`` simply joins it.  Transient errors get
+        the same bounded retry as foreground loads (counted separately in
+        ``io.prefetch_retries``); a load that still fails leaves the run
+        cold — the error then surfaces on the next foreground
+        ``ensure_loaded`` instead of vanishing into the pool.
         Returns True iff a load was scheduled."""
         if self.arrays is not None or self.loader is None or self._prefetching:
             return False
@@ -128,7 +166,7 @@ class RunFile:
 
         def _load() -> None:
             try:
-                self.ensure_loaded()
+                self.ensure_loaded(_retry_counter="prefetch_retries")
             except Exception:
                 pass
             finally:
@@ -246,6 +284,8 @@ class IOCounters:
     wal_write: int = 0        # durable: WAL record bytes appended
     segment_write: int = 0    # durable: segment file bytes written
     segment_read: int = 0     # durable: segment file bytes (re)loaded
+    read_retries: int = 0     # transient-I/O retries on foreground loads
+    prefetch_retries: int = 0  # transient-I/O retries in the prefetch pool
 
     def total_write(self) -> int:
         return self.flush_write + self.compaction_write + self.index_write
@@ -270,6 +310,8 @@ class IOCounters:
             wal_write=self.wal_write - other.wal_write,
             segment_write=self.segment_write - other.segment_write,
             segment_read=self.segment_read - other.segment_read,
+            read_retries=self.read_retries - other.read_retries,
+            prefetch_retries=self.prefetch_retries - other.prefetch_retries,
         )
 
 

@@ -48,7 +48,16 @@ def main() -> None:
     ap.add_argument("--wal-sync", default="batch",
                     choices=["always", "batch", "off"],
                     help="WAL fsync policy in --durable mode")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injection phase (needs --shards and "
+                         "--durable): corrupt one shard's newest segment "
+                         "on disk, show degraded-mode serving (healthy "
+                         "shards answer, the bad range is reported, writes "
+                         "to the fenced shard get backpressure), then heal "
+                         "it with reopen_shard and verify equivalence")
     args = ap.parse_args()
+    if args.chaos and not (args.shards > 0 and args.durable):
+        ap.error("--chaos requires --shards N and --durable DIR")
 
     v = args.vertices
     cfg = StoreConfig(vmax=v, mem_edges=1 << 12, seg_size=8,
@@ -221,6 +230,10 @@ def _run_sharded(args, cfg) -> None:
         print(f"({args.analytics} analytics need the single-store CSR "
               "path; skipped in --shards mode)")
     _query_phase(snap, v, args, label="sharded batched reads")
+    if args.chaos:
+        snap.release()
+        _chaos_phase(g, v, args)
+        snap = g.snapshot()  # re-pin post-heal for restart-and-verify
     if args.durable:
         _restart_verify(snap, g, disk=g.disk_bytes(),
                         reopen=lambda: open_sharded_store(args.durable),
@@ -228,6 +241,71 @@ def _run_sharded(args, cfg) -> None:
     else:
         snap.release()
         g.close()
+
+
+def _chaos_phase(g, v: int, args) -> None:
+    """Survive-the-disk demo: flip one bit in a victim shard's newest
+    segment, evict page-cache arrays so reads must hit disk, and show the
+    failure-isolation contract — healthy shards keep answering with a
+    typed report on the masked range, writes touching the fenced shard get
+    backpressure, and ``reopen_shard`` heals back to full equivalence."""
+    import glob
+    import os
+
+    from ..shard import ShardUnavailable
+    from ..storage import faultfs
+
+    with g.snapshot() as s:
+        oracle = s.edge_set()
+    victim, seg = None, None
+    for cand in range(g.n_shards):
+        segs = sorted(glob.glob(os.path.join(
+            g.shard_roots[cand], "segments", "*.csr")))
+        if segs:
+            victim, seg = cand, segs[-1]
+            break
+    if victim is None:
+        print("chaos: no on-disk segments to corrupt; skipped")
+        return
+    faultfs.flip_bit(seg)
+    for shard in g.shards:
+        if shard.durability is not None:
+            shard.durability.evict_all_segments()
+    print(f"chaos: flipped one bit in shard {victim}'s "
+          f"{os.path.basename(seg)}")
+
+    rng = np.random.default_rng(args.seed + 2)
+    qs = rng.integers(0, v, 256).astype(np.int64)
+    t0 = time.time()
+    with g.snapshot() as s:
+        res, rep = s.neighbors_batch(qs, with_report=True)
+    healthy = sum(len(r) > 0 for i, r in enumerate(res)
+                  if i not in set(rep.positions.tolist()))
+    print(f"chaos: degraded read of {len(qs)} vertices in "
+          f"{(time.time()-t0)*1e3:.1f} ms — {len(rep.positions)} masked "
+          f"(shards {list(rep.shards)}), {healthy} healthy non-empty")
+    for s_id, entry in g.health_report().items():
+        print(f"chaos:   shard {s_id} [{entry['range'][0]},"
+              f"{entry['range'][1]}] {entry['status']}"
+              + (f" — {entry['reason']}" if "reason" in entry else ""))
+    lo, hi = g.part.shard_range(victim)
+    try:
+        g.insert_edges(np.array([lo], np.int64), np.array([0], np.int64))
+        print("chaos: ERROR — write to fenced shard was accepted")
+        raise SystemExit("chaos phase FAILED")
+    except ShardUnavailable as e:
+        print(f"chaos: write to fenced shard rejected (backpressure): {e}")
+
+    t0 = time.time()
+    g.reopen_shard(victim)
+    with g.snapshot() as s:
+        post = s.edge_set()
+    ok = post == oracle
+    print(f"chaos: reopen_shard({victim}) in {time.time()-t0:.2f}s; "
+          f"edge set {'restored — byte-for-byte equivalent' if ok else 'MISMATCH'}; "
+          f"health={[e['status'] for e in g.health_report().values()]}")
+    if not ok:
+        raise SystemExit("chaos phase FAILED: edge set not restored")
 
 
 if __name__ == "__main__":

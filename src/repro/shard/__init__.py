@@ -68,11 +68,12 @@ from __future__ import annotations
 from .partition import RangePartition, shard_scaled_config
 from .router import (bucket_edge_batches, make_mesh_write_router,
                      route_queries)
-from .store import (ShardWriteReceipt, ShardedGraphStore, ShardedSnapshot,
-                    open_sharded_store)
+from .store import (DegradedReport, ShardUnavailable, ShardWriteReceipt,
+                    ShardedGraphStore, ShardedSnapshot, open_sharded_store)
 
 __all__ = [
-    "RangePartition", "ShardWriteReceipt", "ShardedGraphStore",
+    "DegradedReport", "RangePartition", "ShardUnavailable",
+    "ShardWriteReceipt", "ShardedGraphStore",
     "ShardedSnapshot", "bucket_edge_batches", "make_mesh_write_router",
     "open_sharded_store", "route_queries",
     "shard_scaled_config",

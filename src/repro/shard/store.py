@@ -30,6 +30,8 @@ import numpy as np
 from ..core.store import LSMGraph, Snapshot, slice_adjacency
 from ..core.types import StoreConfig
 from ..storage import fsutil
+from ..storage.errors import (CorruptionError, DegradedRange, DurabilityLost,
+                              StorageError)
 from . import router
 from .partition import RangePartition, shard_scaled_config
 
@@ -37,32 +39,61 @@ SHARD_DIR_FMT = "shard-%02d"
 SHARD_META = "SHARDS.json"
 
 
-def _run_calls(pool: ThreadPoolExecutor, calls: list) -> list:
-    """Run ``(fn, args)`` pairs via ``pool``; calls that could not be
-    submitted (pool shut down — e.g. a read on a pinned snapshot, or an
-    ack racing ``close()``) run inline instead.  Already-submitted futures
-    are always awaited, never re-executed — and EVERY future is drained
-    before the first error propagates, so no per-shard work is left in
-    flight against state (pinned snapshots, open WALs) the caller may tear
-    down right after catching the exception."""
+class ShardUnavailable(RuntimeError):
+    """Write backpressure: the batch touches at least one fenced shard.
+    Nothing was applied anywhere — retry after ``reopen_shard`` heals the
+    fenced member(s)."""
+
+    def __init__(self, msg: str, *, shards: Sequence[int] = ()):
+        super().__init__(msg)
+        self.shards = tuple(shards)
+
+
+class DegradedReport(NamedTuple):
+    """What a sharded read could NOT answer: the fenced/degraded shards,
+    the unavailable vertex ranges, and the query positions whose results
+    were masked to empty because of them."""
+
+    shards: Tuple[int, ...]
+    ranges: Tuple[DegradedRange, ...]
+    positions: np.ndarray  # indices into the caller's query vector
+
+    @property
+    def ok(self) -> bool:
+        return len(self.positions) == 0
+
+
+def _run_calls_settled(pool: ThreadPoolExecutor, calls: list) -> list:
+    """Run ``(fn, args)`` pairs via ``pool``; returns ``(result, error)``
+    per call — every future is drained, no exception escapes.  Calls that
+    could not be submitted (pool shut down — e.g. a read on a pinned
+    snapshot, or an ack racing ``close()``) run inline instead;
+    already-submitted futures are always awaited, never re-executed."""
     futs = []
     for fn, args in calls:
         try:
             futs.append(pool.submit(fn, *args))
         except RuntimeError:
             futs.append(None)
-    results = []
-    first_err: Optional[BaseException] = None
+    settled = []
     for (fn, args), f in zip(calls, futs):
         try:
-            results.append(f.result() if f is not None else fn(*args))
+            settled.append((f.result() if f is not None else fn(*args), None))
         except BaseException as e:
-            results.append(None)
-            if first_err is None:
-                first_err = e
-    if first_err is not None:
-        raise first_err
-    return results
+            settled.append((None, e))
+    return settled
+
+
+def _run_calls(pool: ThreadPoolExecutor, calls: list) -> list:
+    """``_run_calls_settled`` with the original raise-first-error contract:
+    EVERY future is drained before the first error propagates, so no
+    per-shard work is left in flight against state (pinned snapshots, open
+    WALs) the caller may tear down right after catching the exception."""
+    settled = _run_calls_settled(pool, calls)
+    for _res, err in settled:
+        if err is not None:
+            raise err
+    return [res for res, _err in settled]
 
 
 class ShardWriteReceipt(NamedTuple):
@@ -82,11 +113,16 @@ class ShardedSnapshot:
     all collected under the same coordinator epoch."""
 
     def __init__(self, part: RangePartition, snaps: Sequence[Snapshot],
-                 epoch: int, pool: ThreadPoolExecutor):
+                 epoch: int, pool: ThreadPoolExecutor,
+                 fenced: Optional[Dict[int, str]] = None,
+                 owner: Optional["ShardedGraphStore"] = None):
         self.part = part
-        self.snaps = list(snaps)
+        self.snaps = list(snaps)       # entry is None for a fenced shard
         self.epoch = epoch
-        self.taus: Tuple[int, ...] = tuple(s.tau for s in self.snaps)
+        self.taus: Tuple[int, ...] = tuple(
+            (-1 if s is None else s.tau) for s in self.snaps)
+        self.fenced: Dict[int, str] = dict(fenced or {})
+        self._owner = owner
         self._pool = pool
         self._released = False
 
@@ -95,12 +131,64 @@ class ShardedSnapshot:
         store closed must stay readable (the single-store contract)."""
         return _run_calls(self._pool, calls)
 
+    def _note_failure(self, s: int, err: BaseException) -> None:
+        """A shard failed mid-read.  Corruption / lost durability fences the
+        shard at the store (stop routing writes, future snapshots skip it);
+        a transient I/O failure only degrades THIS read — the next snapshot
+        retries the shard."""
+        if (isinstance(err, (CorruptionError, DurabilityLost))
+                and self._owner is not None):
+            self._owner.fence(s, err)
+
+    def _unavailable(self, uniq: np.ndarray):
+        """Mask over the SORTED unique query vector: True where the owning
+        shard is fenced (no pinned snapshot) or the vertex falls inside a
+        degraded range pinned by the owner's snapshot.  Returns
+        ``(mask, shards, ranges)`` feeding the ``DegradedReport``."""
+        mask = np.zeros(len(uniq), bool)
+        shards: List[int] = []
+        ranges: List[DegradedRange] = []
+        for s in range(self.part.n_shards):
+            r_lo, r_hi = self.part.shard_range(s)
+            lo_i = int(np.searchsorted(uniq, r_lo))
+            hi_i = int(np.searchsorted(uniq, r_hi))
+            if hi_i <= lo_i:
+                continue
+            if self.snaps[s] is None:
+                mask[lo_i:hi_i] = True
+                shards.append(s)
+                ranges.append(DegradedRange(
+                    int(r_lo), int(r_hi) - 1, -1,
+                    f"shard {s} fenced: {self.fenced.get(s, 'fenced')}"))
+                continue
+            view = mask[lo_i:hi_i]
+            sub = uniq[lo_i:hi_i]
+            for r in getattr(self.snaps[s], "degraded", ()):
+                hit = (sub >= r.lo) & (sub <= r.hi)
+                if hit.any():
+                    view[hit] = True
+                    if s not in shards:
+                        shards.append(s)
+                    ranges.append(r)
+        return mask, shards, ranges
+
     # ------------------------------------------------------------------ reads
-    def neighbors_batch(self, vs, return_props: bool = False) -> list:
+    def neighbors_batch(self, vs, return_props: bool = False,
+                        with_report: bool = False):
         """Adjacency of every vertex in ``vs`` — route, per-shard batched
         resolve, gather + inverse permutation.  Element-wise identical to a
         single store holding the union of all shards (the oracle the shard
         tests compare against); no-shard vertices resolve to empty arrays.
+
+        Degraded-mode serving: vertices owned by a fenced shard, or falling
+        inside a degraded (quarantined-segment) range, are MASKED — their
+        results come back empty and healthy shards still answer, instead of
+        one bad disk panicking the whole fan-out.  A shard that fails
+        mid-resolve with a typed ``StorageError`` is fenced and its
+        positions join the mask; any other exception still propagates.
+        Pass ``with_report=True`` to get ``(results, DegradedReport)`` —
+        the report names the masked positions, shards, and vertex ranges
+        (``report.ok`` is True on a fully-healthy read).
 
         Routing piggybacks on the sort the batched read path needs anyway:
         the SORTED unique query vector splits into per-shard contiguous
@@ -111,45 +199,86 @@ class ShardedSnapshot:
         assembly each happen once globally, not once per shard."""
         vs = np.asarray(vs, np.int64).ravel()
         if vs.size == 0:
-            return []
+            rep = DegradedReport((), (), np.empty(0, np.int64))
+            return ([], rep) if with_report else []
         uniq, inv = np.unique(vs, return_inverse=True)
         B = len(uniq)
+        mask, bad_shards, bad_ranges = self._unavailable(uniq)
+        empty_one = ((np.empty(0, np.int64), np.empty(0, np.float32))
+                     if return_props else np.empty(0, np.int64))
         if B == 1:
             # Keep the single-store point-read fast path: the owning
             # shard's neighbors_batch takes its O(degree) scalar shortcut
             # instead of a capacity-shaped batched resolve.
             owner = int(self.part.owner_of(uniq)[0])
-            if owner < 0:
-                one = ((np.empty(0, np.int64), np.empty(0, np.float32))
-                       if return_props else np.empty(0, np.int64))
-            else:
-                one = self.snaps[owner].neighbors_batch(
-                    uniq, return_props=return_props)[0]
-            return [one] * len(vs)
+            one = empty_one
+            if owner >= 0 and not mask[0]:
+                try:
+                    one = self.snaps[owner].neighbors_batch(
+                        uniq, return_props=return_props)[0]
+                except StorageError as e:
+                    if not with_report:
+                        raise
+                    self._note_failure(owner, e)
+                    mask[0] = True
+                    bad_shards.append(owner)
+                    bad_ranges.extend(
+                        getattr(e, "ranges", ())
+                        or (DegradedRange(int(uniq[0]), int(uniq[0]),
+                                          -1, str(e)),))
+            out = [one] * len(vs)
+            if with_report:
+                pos = (np.arange(len(vs), dtype=np.int64) if mask[0]
+                       else np.empty(0, np.int64))
+                return out, DegradedReport(tuple(dict.fromkeys(bad_shards)),
+                                           tuple(bad_ranges), pos)
+            return out
         counts = np.zeros(B, np.int64)
-        slices = []
+        slices = []   # (shard, index vector into uniq — mask holes removed)
         for s in range(self.part.n_shards):
+            if self.snaps[s] is None:
+                continue
             r_lo, r_hi = self.part.shard_range(s)
             lo_i = int(np.searchsorted(uniq, r_lo))
             hi_i = int(np.searchsorted(uniq, r_hi))
-            if hi_i > lo_i:
-                slices.append((s, lo_i, hi_i))
+            if hi_i <= lo_i:
+                continue
+            idx = lo_i + np.nonzero(~mask[lo_i:hi_i])[0]
+            if len(idx):
+                slices.append((s, idx))
         # Kick EVERY shard's cold-segment loads onto the shared prefetch
         # pool before the first resolve dispatches: a late shard in the
         # fan-out order has its segments resident (or in flight) by the
         # time a worker reaches it, instead of paying the load serially in
         # router order.  Shards whose read spine is already built never
         # touch segment arrays again — skip those.
-        for (s, lo_i, hi_i) in slices:
+        for (s, idx) in slices:
             if self.snaps[s]._backbone is None:
-                self.snaps[s]._prefetch_range(int(uniq[lo_i]),
-                                              int(uniq[hi_i - 1]))
-        results = self._map_shards(
-            [(self.snaps[s]._resolve_batch_chunked, (uniq[lo_i:hi_i],))
-             for (s, lo_i, hi_i) in slices])
+                self.snaps[s]._prefetch_range(int(uniq[idx[0]]),
+                                              int(uniq[idx[-1]]))
+        settled = _run_calls_settled(
+            self._pool,
+            [(self.snaps[s]._resolve_batch_chunked, (uniq[idx],))
+             for (s, idx) in slices])
         dst_parts, prop_parts = [], []
-        for (_s, lo_i, hi_i), (offs_s, dst_s, prop_s) in zip(slices, results):
-            counts[lo_i:hi_i] = np.diff(offs_s)
+        for (s, idx), (res, err) in zip(slices, settled):
+            if err is not None:
+                if not isinstance(err, StorageError):
+                    raise err
+                # Mid-read failure (cold segment turned out corrupt, I/O
+                # error past the retry budget): degrade this shard's
+                # positions instead of panicking the reader.  counts stays
+                # 0 there, so the in-order concat below is unaffected.
+                self._note_failure(s, err)
+                mask[idx] = True
+                bad_shards.append(s)
+                bad_ranges.extend(
+                    getattr(err, "ranges", ())
+                    or (DegradedRange(int(uniq[idx[0]]), int(uniq[idx[-1]]),
+                                      -1, str(err)),))
+                continue
+            offs_s, dst_s, prop_s = res
+            counts[idx] = np.diff(offs_s)
             dst_parts.append(dst_s)
             prop_parts.append(prop_s)
         dst = (np.concatenate(dst_parts) if dst_parts
@@ -158,11 +287,18 @@ class ShardedSnapshot:
                 else np.empty(0, np.float32))
         offs = np.zeros(B + 1, np.int64)
         np.cumsum(counts, out=offs[1:])
-        return slice_adjacency(offs, dst, prop, inv, return_props)
+        out = slice_adjacency(offs, dst, prop, inv, return_props)
+        if with_report:
+            pos = np.nonzero(mask[inv])[0].astype(np.int64)
+            return out, DegradedReport(tuple(dict.fromkeys(bad_shards)),
+                                       tuple(bad_ranges), pos)
+        return out
 
     def query_edges_batch(self, us, vs) -> np.ndarray:
         """Batched edge membership — routed by source vertex; pairs whose
-        source lives on no shard are absent by definition (False)."""
+        source lives on no shard are absent by definition (False).  Pairs
+        owned by a fenced shard, or hitting a mid-read ``StorageError``,
+        answer False (degraded-mode: membership unknown => not asserted)."""
         us = np.asarray(us, np.int64).ravel()
         vs = np.asarray(vs, np.int64).ravel()
         if us.shape != vs.shape:
@@ -171,11 +307,18 @@ class ShardedSnapshot:
             return np.zeros(0, bool)
         per_us, per_pos, n = router.route_queries(self.part, us)
         out = np.zeros(n, bool)
-        touched = [s for s, sub_us in enumerate(per_us) if len(sub_us)]
-        results = self._map_shards(
+        touched = [s for s, sub_us in enumerate(per_us)
+                   if len(sub_us) and self.snaps[s] is not None]
+        settled = _run_calls_settled(
+            self._pool,
             [(self.snaps[s].query_edges_batch, (per_us[s], vs[per_pos[s]]))
              for s in touched])
-        for s, res in zip(touched, results):
+        for s, (res, err) in zip(touched, settled):
+            if err is not None:
+                if not isinstance(err, StorageError):
+                    raise err
+                self._note_failure(s, err)
+                continue
             out[per_pos[s]] = res
         return out
 
@@ -183,17 +326,20 @@ class ShardedSnapshot:
         return np.array([len(n) for n in self.neighbors_batch(vs)], np.int64)
 
     def edge_set(self) -> set:
-        """Union of per-shard live edge sets (verification only — O(E))."""
+        """Union of per-shard live edge sets (verification only — O(E));
+        fenced shards contribute nothing."""
         out: set = set()
         for snap in self.snaps:
-            out |= snap.edge_set()
+            if snap is not None:
+                out |= snap.edge_set()
         return out
 
     # -------------------------------------------------------------- lifecycle
     def release(self) -> None:
         if not self._released:
             for snap in self.snaps:
-                snap.release()
+                if snap is not None:
+                    snap.release()
             self._released = True
 
     def __enter__(self) -> "ShardedSnapshot":
@@ -237,6 +383,17 @@ class ShardedGraphStore:
         # owner shard or on none), NOT across reads.
         self._epoch_lock = threading.RLock()
         self._epoch = 0
+        # Failure isolation: shard -> reason for every fenced shard.  Guarded
+        # by its OWN plain lock, never the epoch RLock — pool worker threads
+        # fence mid-apply/mid-read while the coordinator thread holds the
+        # epoch lock waiting on those very futures; sharing the (non-
+        # reentrant-across-threads) lock would deadlock the fan-out.
+        self._health_lock = threading.Lock()
+        self._fenced: Dict[int, str] = {}
+        # Set by open_sharded_store: per-shard root dirs + open options, the
+        # recovery source reopen_shard() needs.  None for in-memory stores.
+        self.shard_roots: Optional[List[str]] = None
+        self._open_opts: Dict[str, object] = {}
         # Fan-out concurrency: one worker per core (not per shard) — the
         # per-shard resolves/applies are CPU-bound XLA+host work, and
         # oversubscribing cores just thrashes the GIL and the XLA pool.
@@ -260,6 +417,17 @@ class ShardedGraphStore:
                       ) -> ShardWriteReceipt:
         buckets = router.bucket_edge_batches(self.part, src, dst, prop)
         with self._epoch_lock:
+            # Backpressure BEFORE any shard applies: a batch touching a
+            # fenced shard is rejected whole (nothing lands anywhere), so
+            # callers never hold a receipt that is unackable by
+            # construction.  Healthy-shard-only batches flow normally.
+            with self._health_lock:
+                bad = [s for s, b in enumerate(buckets)
+                       if b is not None and s in self._fenced]
+            if bad:
+                raise ShardUnavailable(
+                    f"write touches fenced shard(s) {bad}; reopen_shard() "
+                    "to heal, then retry the batch", shards=bad)
             self._epoch += 1
             epoch = self._epoch
             touched, calls = [], []
@@ -269,8 +437,9 @@ class ShardedGraphStore:
                 b_src, b_dst, b_prop = bucket
                 g = self.shards[s]
                 touched.append(s)
-                calls.append((g.delete_edges, (b_src, b_dst)) if delete
-                             else (g.insert_edges, (b_src, b_dst, b_prop)))
+                fn = g.delete_edges if delete else g.insert_edges
+                args = (b_src, b_dst) if delete else (b_src, b_dst, b_prop)
+                calls.append((self._guarded(s, fn), args))
             # _run_calls drains EVERY future before the first error
             # propagates, so the epoch lock never releases with sub-batches
             # still landing (the torn state the epoch protocol forbids).
@@ -281,22 +450,133 @@ class ShardedGraphStore:
         return ShardWriteReceipt(
             epoch, {s: q for s, q in seqs.items() if q is not None})
 
+    def _guarded(self, s: int, fn):
+        """Wrap a per-shard call: a typed storage failure fences the shard
+        (isolating the blast radius to its vertex range) before the error
+        propagates to the coordinator."""
+        def run(*args):
+            try:
+                return fn(*args)
+            except (CorruptionError, DurabilityLost) as e:
+                self.fence(s, e)
+                raise
+        return run
+
     def ack(self, receipt: ShardWriteReceipt) -> None:
         """Await durability of ONE routed batch: per shard, block until that
         shard's WAL fsynced the batch's commit seq (``sync_upto``).  Shards
         untouched by the batch — and their WAL queues — are never waited
         on.  No-op for in-memory shards (empty ``seqs``); safe when racing
         ``close()`` (close fsyncs every WAL, so the inline fallback sees
-        the seq already durable)."""
-        _run_calls(self._pool, [(self.shards[s].ack, (seq,))
+        the seq already durable).
+
+        A shard whose WAL latched its fail-stop flag (failed fsync) raises
+        ``DurabilityLost`` **attributed to that shard** (``e.shard``), and
+        the shard is fenced — the other shards' acks complete first (every
+        future drains before the error propagates)."""
+        _run_calls(self._pool, [(self._ack_one, (s, seq))
                                 for s, seq in receipt.seqs.items()])
+
+    def _ack_one(self, s: int, seq: int) -> None:
+        try:
+            self.shards[s].ack(seq)
+        except DurabilityLost as e:
+            self.fence(s, e)
+            if e.shard is None:
+                raise DurabilityLost(f"shard {s}: {e}", shard=s) from e
+            raise
+        except CorruptionError as e:
+            self.fence(s, e)
+            raise
+        except OSError as e:
+            # The FIRST failed fsync surfaces as the raw OSError (the WAL
+            # latches its fail-stop flag as it raises); later calls get the
+            # typed DurabilityLost.  Normalize: callers of the sharded ack
+            # always see a shard-attributed DurabilityLost.
+            self.fence(s, e)
+            raise DurabilityLost(f"shard {s}: {e}", shard=s) from e
+
+    # ------------------------------------------------------------------ health
+    def fence(self, s: int, err) -> None:
+        """Mark shard ``s`` failed: writes touching it are rejected
+        (``ShardUnavailable``) and new snapshots skip it (its range reads
+        as degraded).  Idempotent; the FIRST error is the recorded cause."""
+        with self._health_lock:
+            self._fenced.setdefault(
+                int(s), f"{type(err).__name__}: {err}")
+
+    def fenced(self) -> Dict[int, str]:
+        """Snapshot of the fenced-shard map (shard -> reason)."""
+        with self._health_lock:
+            return dict(self._fenced)
+
+    def health_report(self) -> Dict[int, dict]:
+        """Per-shard health: ``ok``, ``degraded`` (serving around
+        quarantined segment ranges), or ``fenced`` (range unavailable until
+        ``reopen_shard``)."""
+        fenced = self.fenced()
+        report: Dict[int, dict] = {}
+        for s, g in enumerate(self.shards):
+            lo, hi = self.part.shard_range(s)
+            entry: dict = {"range": (int(lo), int(hi) - 1), "status": "ok"}
+            if s in fenced:
+                entry["status"] = "fenced"
+                entry["reason"] = fenced[s]
+            else:
+                dr = g.degraded_ranges()
+                if dr:
+                    entry["status"] = "degraded"
+                    entry["degraded"] = [
+                        {"lo": r.lo, "hi": r.hi, "fid": r.fid,
+                         "reason": r.reason} for r in dr]
+            report[s] = entry
+        return report
+
+    def reopen_shard(self, s: int) -> None:
+        """Heal a fenced (or degraded) shard by closing its store and
+        re-running crash recovery from its own directory — the WAL +
+        manifest + quarantine protocol makes the directory the source of
+        truth, so the reopened shard serves exactly its acked writes.
+        Unfences ``s`` and bumps the epoch (old receipts for this shard are
+        stale by construction).  Durable sharded stores only."""
+        s = int(s)
+        if not self.shard_roots:
+            raise RuntimeError(
+                "reopen_shard requires a durable sharded store "
+                "(opened via open_sharded_store)")
+        from ..storage import open_store
+        with self._epoch_lock:
+            old = self.shards[s]
+            try:
+                old.close()
+            except (StorageError, OSError):
+                pass  # a latched WAL may refuse its final fsync; recovery
+                      # reads the on-disk state, not the dying handle
+            self.shards[s] = open_store(self.shard_roots[s],
+                                        **self._open_opts)
+            with self._health_lock:
+                self._fenced.pop(s, None)
+            self._epoch += 1
 
     # ------------------------------------------------------------------ reads
     def snapshot(self) -> ShardedSnapshot:
         with self._epoch_lock:
-            snaps = [g.snapshot() for g in self.shards]
+            fenced = self.fenced()
+            snaps: List[Optional[Snapshot]] = []
+            for s, g in enumerate(self.shards):
+                if s in fenced:
+                    snaps.append(None)
+                    continue
+                try:
+                    snaps.append(g.snapshot())
+                except StorageError as e:
+                    # Pinning itself failed: fence and serve the rest.
+                    self.fence(s, e)
+                    fenced[s] = f"{type(e).__name__}: {e}"
+                    snaps.append(None)
             epoch = self._epoch
-        return ShardedSnapshot(self.part, snaps, epoch, self._pool)
+        return ShardedSnapshot(self.part, snaps, epoch, self._pool,
+                               fenced=fenced, owner=self)
 
     def sharded_neighbors_batch(self, vs, return_props: bool = False) -> list:
         """One-shot routed batched read (snapshot + resolve + release)."""
@@ -331,9 +611,22 @@ class ShardedGraphStore:
         return sum(g.disk_bytes() for g in self.shards)
 
     def close(self) -> None:
-        for g in self.shards:
-            g.close()
+        """Close every shard.  A FENCED shard's close failure (e.g. a
+        latched WAL refusing its final fsync) is swallowed — the loss was
+        already surfaced when the shard fenced; an unfenced shard's failure
+        still propagates (after every sibling closed and the pool drained,
+        so nothing leaks)."""
+        fenced = self.fenced()
+        first_err: Optional[BaseException] = None
+        for s, g in enumerate(self.shards):
+            try:
+                g.close()
+            except (StorageError, OSError) as e:
+                if s not in fenced and first_err is None:
+                    first_err = e
         self._pool.shutdown(wait=True)
+        if first_err is not None:
+            raise first_err
 
 
 def _load_shard_meta(root: str, meta_path: str) -> Optional[dict]:
@@ -363,6 +656,9 @@ def open_sharded_store(root: str, cfg: Optional[StoreConfig] = None, *,
                        n_shards: Optional[int] = None,
                        wal_sync: str = "batch",
                        wal_sync_interval: float = 0.05,
+                       wal_retain: int = 2,
+                       on_corruption: str = "degrade",
+                       scrub_interval: Optional[float] = None,
                        scale_mem: bool = False) -> ShardedGraphStore:
     """Open (or create) a durable sharded store rooted at ``root``.
 
@@ -416,7 +712,10 @@ def open_sharded_store(root: str, cfg: Optional[StoreConfig] = None, *,
         futs = [pool.submit(open_store,
                             os.path.join(root, SHARD_DIR_FMT % s), shard_cfg,
                             wal_sync=wal_sync,
-                            wal_sync_interval=wal_sync_interval)
+                            wal_sync_interval=wal_sync_interval,
+                            wal_retain=wal_retain,
+                            on_corruption=on_corruption,
+                            scrub_interval=scrub_interval)
                 for s in range(n_shards)]
         stores = []
         first_err: Optional[BaseException] = None
@@ -464,8 +763,17 @@ def open_sharded_store(root: str, cfg: Optional[StoreConfig] = None, *,
         fsutil.fsync_dir(root)
     # Shard configs keep the GLOBAL vmax, so the partition (derived from
     # stores[0].cfg at reopen) covers the original vertex-id space.
-    return ShardedGraphStore(stores=stores)
+    sharded = ShardedGraphStore(stores=stores)
+    # Remember where each shard lives + how it was opened: reopen_shard()
+    # heals a fenced member by re-running recovery with the same options.
+    sharded.shard_roots = [os.path.join(root, SHARD_DIR_FMT % s)
+                           for s in range(n_shards)]
+    sharded._open_opts = dict(
+        wal_sync=wal_sync, wal_sync_interval=wal_sync_interval,
+        wal_retain=wal_retain, on_corruption=on_corruption,
+        scrub_interval=scrub_interval)
+    return sharded
 
 
-__all__ = ["ShardWriteReceipt", "ShardedGraphStore", "ShardedSnapshot",
-           "open_sharded_store"]
+__all__ = ["DegradedReport", "ShardUnavailable", "ShardWriteReceipt",
+           "ShardedGraphStore", "ShardedSnapshot", "open_sharded_store"]

@@ -20,6 +20,14 @@ classic LSM recipe (Luo & Carey's survey; RocksDB/LevelDB lineage):
     segments, rebuild the multi-level index, replay the WAL tail into a
     fresh MemGraph.
   * ``crashtest.py`` — subprocess child for SIGKILL crash-recovery tests.
+  * ``errors.py``    — typed failure taxonomy + bounded retry policy.
+  * ``faultfs.py``   — deterministic fault-injection seam every fsync /
+    write / segment-read in this package routes through (zero-cost when
+    disarmed: one ``is None`` check).
+  * ``scrub.py``     — segment quarantine + WAL rebuild + the background
+    scrubber thread.
+  * ``chaostest.py`` — randomized fault-schedule harness
+    (``make chaos-smoke``; ``python -m repro.storage.chaostest``).
 
 Directory layout
 ----------------
@@ -117,16 +125,67 @@ Recovery protocol
    ``last replayed ts + 1`` (never past an unreplayed record: a
    replay-triggered flush must publish a ``wal_floor`` that is true) —
    the reopened ``edge_set()`` equals the pre-crash snapshot.
+
+Failure model
+-------------
+
+The engine assumes disks fail in four ways and answers each with a typed
+error (``errors.py``) and a bounded recovery action — never a silent wrong
+answer, never an unbounded retry:
+
+* **Transient read I/O** (``TransientIOError``, carries ``transient =
+  True``): a cold segment read hits EIO.  Retried with bounded exponential
+  backoff + wall-clock deadline at exactly ONE layer
+  (``RunFile.ensure_loaded``, under the load lock, so foreground loads and
+  background prefetch never stack retries); retry counts land in
+  ``IOCounters.read_retries`` / ``prefetch_retries``.  Exhaustion
+  propagates the typed error.
+* **Failed fsync** (``DurabilityLost``): fsyncgate semantics — the kernel
+  may mark pages clean after a FAILED fsync, so a retry that "succeeds"
+  proves nothing.  The WAL (and manifest) latch a sticky fail-stop flag on
+  the first failure: the raising call surfaces the raw ``OSError``, every
+  later append/sync/publish raises ``DurabilityLost``.  A torn WAL
+  ``write`` latches the same flag (replay stops at the torn record, so
+  later appends would be silently dropped even if durable).  Recovery =
+  reopen from disk state.
+* **Detected corruption** (``CorruptionError``, carries ``fid`` +
+  ``DegradedRange``s): a segment fails its CRC.  The serving path fails
+  FAST — quarantine the file (``quarantine/``), publish a manifest
+  ``quarantine`` event, mark the vertex range degraded, raise typed; no
+  inline repair on the read path.  Repair is off-path: the background
+  ``Scrubber`` (or the next reopen) rewrites resident arrays in place, or
+  rebuilds L0 flush segments byte-identically from their retained WAL
+  generation (``wal_retain``; each flush segment records its ``wal_seq``).
+  Queries overlapping a still-degraded range raise ``CorruptionError``;
+  everything else keeps serving (``on_corruption="degrade"``, the default
+  — ``"raise"`` fails the open instead).
+* **Lost durability at the shard tier**: ``repro.shard`` maps a shard's
+  latched/corrupt state to per-shard FENCING — writes touching the shard
+  get backpressure (``ShardUnavailable``), sharded reads mask its range
+  and report it (``DegradedReport``), and ``reopen_shard`` heals by
+  re-running recovery on that shard's directory.
+
+``faultfs`` is the injection seam for all of the above; the invariants are
+enforced by ``chaostest.run_schedule`` (randomized schedules: acked writes
+survive reopen modulo explicitly-reported degraded ranges, unacked writes
+are never claimed durable, readers only ever see typed errors).
 """
 from __future__ import annotations
 
 from .engine import DurableStorage, SimulatedCrash, open_store
+from .errors import (CorruptionError, DegradedRange, DurabilityLost,
+                     StorageError, TransientIOError, retry_transient)
+from .faultfs import FaultPlan, FaultRule, fault_plan
 from .manifest import Manifest
-from .segments import read_segment, read_segment_header, write_segment
+from .scrub import Scrubber
+from .segments import (read_segment, read_segment_header, verify_segment,
+                       write_segment)
 from .wal import WalAppend, WriteAheadLog
 
 __all__ = [
-    "DurableStorage", "Manifest", "SimulatedCrash", "WalAppend",
-    "WriteAheadLog", "open_store", "read_segment", "read_segment_header",
-    "write_segment",
+    "CorruptionError", "DegradedRange", "DurabilityLost", "DurableStorage",
+    "FaultPlan", "FaultRule", "Manifest", "Scrubber", "SimulatedCrash",
+    "StorageError", "TransientIOError", "WalAppend", "WriteAheadLog",
+    "fault_plan", "open_store", "read_segment", "read_segment_header",
+    "retry_transient", "verify_segment", "write_segment",
 ]

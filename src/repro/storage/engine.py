@@ -34,16 +34,20 @@ from __future__ import annotations
 import dataclasses
 import fcntl
 import os
-from typing import Dict, List, Optional, Set
+import threading
+from typing import Dict, List, Optional, Set, Tuple
 
 from ..core.store import LSMGraph
 from ..core.types import RunFile, StoreConfig
+from . import scrub as scrub_mod
 from . import segments as seg_mod
+from .errors import CorruptionError, DegradedRange
 from .manifest import Manifest
 from .wal import WriteAheadLog
 
 SEGMENT_DIR = "segments"
 WAL_DIR = "wal"
+QUARANTINE_DIR = scrub_mod.QUARANTINE_DIR
 
 
 class SimulatedCrash(RuntimeError):
@@ -59,10 +63,27 @@ class DurableStorage:
 
     def __init__(self, root: str, *, wal_sync: str = "batch",
                  wal_sync_interval: float = 0.05, wal_start_seq: int = 0,
-                 wal_last_ts: Optional[Dict[int, int]] = None):
+                 wal_last_ts: Optional[Dict[int, int]] = None,
+                 wal_retain: int = 2, on_corruption: str = "degrade",
+                 scrub_interval: Optional[float] = None):
+        assert on_corruption in ("degrade", "raise")
         self.root = root
         self.seg_dir = os.path.join(root, SEGMENT_DIR)
         os.makedirs(self.seg_dir, exist_ok=True)
+        # Failure handling: keep the newest ``wal_retain`` prunable WAL
+        # generations as the rebuild source for recently-flushed L0
+        # segments; ``on_corruption`` picks whether an unrebuildable
+        # segment degrades its vertex range ("degrade") or fails the open
+        # ("raise"); ``scrub_interval`` (seconds) arms the background
+        # CRC scrubber once a store is attached.
+        self.wal_retain = wal_retain
+        self.on_corruption = on_corruption
+        self.scrub_interval = scrub_interval
+        self.scrubber: Optional[scrub_mod.Scrubber] = None
+        self.degraded: Dict[int, DegradedRange] = {}
+        self._deg_lock = threading.Lock()
+        self.seg_descs: Dict[int, dict] = {}  # fid -> manifest descriptor
+        self._pending_wal_seq = -1  # closed WAL gen of the in-flight flush
         # Exclusive advisory lock (LevelDB-style LOCK file): two writer
         # PROCESSES interleaving manifest/WAL appends would corrupt the
         # store.  POSIX record locks (lockf) are per-process, so reopening
@@ -89,6 +110,9 @@ class DurableStorage:
 
     def attach(self, store: LSMGraph) -> None:
         self.store = store
+        if self.scrub_interval is not None and self.scrubber is None:
+            self.scrubber = scrub_mod.Scrubber(self, self.scrub_interval)
+            self.scrubber.start()
 
     def _crashpoint(self, name: str) -> None:
         if name in self.crash_at:
@@ -98,20 +122,79 @@ class DurableStorage:
     def seg_path(self, fid: int) -> str:
         return os.path.join(self.seg_dir, _seg_name(fid))
 
-    def make_loader(self, path: str):
+    def make_loader(self, path: str, desc: Optional[dict] = None):
+        """Lazy segment loader bound to ``desc`` (the manifest descriptor)
+        for metadata cross-checks.  Retry of transient errors happens in
+        ``RunFile.ensure_loaded``; this closure handles the NON-retryable
+        outcome — corruption — by failing fast: quarantine + manifest event
+        + degraded range, then a typed raise.  No inline repair on the
+        serving path (the scrubber / a reopen rebuilds off-path)."""
         def load():
             seg_mod.advise_willneed(path)  # kernel readahead under the load
-            meta, run = seg_mod.read_segment(path)
+            try:
+                meta, run = seg_mod.read_segment(path)
+                if desc is not None:
+                    for key in ("fid", "level", "min_vid", "max_vid",
+                                "nv", "ne"):
+                        if meta[key] != desc[key]:
+                            raise CorruptionError(
+                                f"{path}: header {key}={meta[key]} disagrees "
+                                f"with manifest {desc[key]}", fid=desc["fid"])
+            except CorruptionError as e:
+                raise self._on_corrupt_load(path, desc, e) from e
             if self.store is not None:
                 self.store.io.segment_read += (
                     os.path.getsize(path) if os.path.exists(path) else 0)
             return run
         return load
 
-    def _segdesc(self, rf: RunFile) -> dict:
-        return {"fid": rf.fid, "level": rf.level, "file": _seg_name(rf.fid),
+    def _on_corrupt_load(self, path: str, desc: Optional[dict],
+                         err: CorruptionError) -> CorruptionError:
+        rng = self.quarantine_segment(path, desc, str(err))
+        fid = err.fid if err.fid is not None else (desc or {}).get("fid")
+        return CorruptionError(str(err), fid=fid,
+                               ranges=(rng,) if rng is not None else ())
+
+    def quarantine_segment(self, path: str, desc: Optional[dict],
+                           reason: str) -> Optional[DegradedRange]:
+        """Move a corrupt segment under quarantine/, publish the manifest
+        event, and record its vertex range as degraded.  Returns the range
+        (None when no descriptor names one)."""
+        qpath = scrub_mod.quarantine_file(self.root, path)
+        if desc is None:
+            return None
+        rng = DegradedRange(int(desc["min_vid"]), int(desc["max_vid"]),
+                            int(desc["fid"]), reason)
+        with self._deg_lock:
+            self.degraded[rng.fid] = rng
+        try:
+            self.manifest.append({
+                "op": "quarantine", "fid": rng.fid, "reason": reason,
+                "desc": desc,
+                "qfile": os.path.basename(qpath) if qpath else None})
+        except OSError:
+            # Advisory: with no quarantine record, a reopen re-detects the
+            # moved/missing file and converges to the same degraded state.
+            pass
+        return rng
+
+    def mark_rebuilt(self, desc: dict) -> None:
+        """Publish a successful rebuild: the fid is live again."""
+        self.manifest.append({"op": "rebuild", "add": [desc]})
+        with self._deg_lock:
+            self.degraded.pop(int(desc["fid"]), None)
+
+    def degraded_ranges(self) -> Tuple[DegradedRange, ...]:
+        with self._deg_lock:
+            return tuple(sorted(self.degraded.values()))
+
+    def _segdesc(self, rf: RunFile, wal_seq: Optional[int] = None) -> dict:
+        desc = {"fid": rf.fid, "level": rf.level, "file": _seg_name(rf.fid),
                 "min_vid": rf.min_vid, "max_vid": rf.max_vid,
                 "created_ts": rf.created_ts, "nv": rf.nv, "ne": rf.ne}
+        if wal_seq is not None and wal_seq >= 0:
+            desc["wal_seq"] = wal_seq  # rebuild source (L0 flush only)
+        return desc
 
     # ------------------------------------------------------------ store hooks
     def on_apply(self, src, dst, ts, marker, prop) -> int:
@@ -130,22 +213,26 @@ class DurableStorage:
 
     def on_flush_rotate(self, boundary_ts: int) -> None:
         """MemGraph double-buffer swap: records with ts >= boundary_ts go to
-        a fresh WAL file, so the closed file maps 1:1 to the full MemGraph."""
-        self.wal.rotate()
+        a fresh WAL file, so the closed file maps 1:1 to the full MemGraph.
+        The closed generation is remembered: it becomes the flush segment's
+        ``wal_seq`` rebuild pointer."""
+        self._pending_wal_seq = self.wal.rotate() - 1
 
     def on_flush_commit(self, rf: RunFile, wal_floor: int) -> None:
         """The L0 run is built and published in memory: make it durable."""
         path = self.seg_path(rf.fid)
         nbytes = seg_mod.write_segment(path, rf)
+        desc = self._segdesc(rf, wal_seq=self._pending_wal_seq)
         rf.path = path
-        rf.loader = self.make_loader(path)
+        rf.loader = self.make_loader(path, desc)
+        self.seg_descs[rf.fid] = desc
         self.store.io.segment_write += nbytes
         self._crashpoint("pre_manifest_flush")
         self.manifest.append({
             "op": "flush", "tau": wal_floor, "wal_floor": wal_floor,
-            "next_fid": self.store._next_fid, "add": [self._segdesc(rf)],
+            "next_fid": self.store._next_fid, "add": [desc],
         })
-        self.wal.prune(wal_floor)
+        self.wal.prune(wal_floor, retain=self.wal_retain)
 
     def on_compact_segments(self, new_segs: List[RunFile]) -> None:
         """Write the merge outputs (lock-free compute phase).  Orphaned on
@@ -153,8 +240,10 @@ class DurableStorage:
         for rf in new_segs:
             path = self.seg_path(rf.fid)
             nbytes = seg_mod.write_segment(path, rf)
+            desc = self._segdesc(rf)
             rf.path = path
-            rf.loader = self.make_loader(path)
+            rf.loader = self.make_loader(path, desc)
+            self.seg_descs[rf.fid] = desc
             self.store.io.segment_write += nbytes
 
     def on_compact_commit(self, removed_runs: List[RunFile],
@@ -169,6 +258,7 @@ class DurableStorage:
             "add": [self._segdesc(rf) for rf in new_segs],
         })
         for rf in removed_runs:
+            self.seg_descs.pop(rf.fid, None)
             # A pinned snapshot may still hold this RunFile with its arrays
             # evicted; re-materialize before the file goes away so its lazy
             # reload can never hit a missing file.
@@ -213,10 +303,66 @@ class DurableStorage:
                     n += bool(rf.evict())
         return n
 
+    def evict_all_segments(self) -> int:
+        """Drop in-RAM arrays of EVERY level's segments (L0 included) so the
+        next read must hit disk — the chaos harness's cold-read lever."""
+        store = self.store
+        n = 0
+        with store._lock:
+            for lvl in store.levels:
+                for rf in lvl:
+                    n += bool(rf.evict())
+        return n
+
+    # ------------------------------------------------------------- scrubbing
+    def scrub_once(self) -> dict:
+        """CRC-verify every live on-disk segment; heal corrupt ones
+        (resident arrays -> rewrite in place; else quarantine + rebuild
+        from the retained WAL generation; else degrade the range).
+        Returns pass statistics."""
+        store = self.store
+        stats = {"verified": 0, "healed_resident": 0, "rebuilt": 0,
+                 "degraded": 0, "transient": 0}
+        if store is None:
+            return stats
+        with store._lock:
+            with self._deg_lock:
+                bad = set(self.degraded)
+            rfs = [rf for lvl in store.levels for rf in lvl
+                   if rf.path is not None and rf.fid not in bad]
+        for rf in rfs:
+            try:
+                seg_mod.verify_segment(rf.path)
+                stats["verified"] += 1
+            except CorruptionError as e:
+                self._scrub_heal(rf, e, stats)
+            except OSError:
+                stats["transient"] += 1  # next cadence retries
+        return stats
+
+    def _scrub_heal(self, rf: RunFile, err: CorruptionError,
+                    stats: dict) -> None:
+        if rf.arrays is not None:
+            # The good bytes are still resident: rewrite in place (atomic
+            # tmp+replace), no quarantine needed.
+            self.store.io.segment_write += seg_mod.write_segment(rf.path, rf)
+            stats["healed_resident"] += 1
+            return
+        desc = self.seg_descs.get(rf.fid)
+        self.quarantine_segment(rf.path, desc, str(err))
+        if desc is not None and scrub_mod.rebuild_segment_from_wal(
+                self.wal.dir, desc, rf.path):
+            self.mark_rebuilt(desc)
+            stats["rebuilt"] += 1
+        else:
+            stats["degraded"] += 1
+
     def close(self) -> None:
         if self._closed:
             return
         self._closed = True
+        if self.scrubber is not None:
+            self.scrubber.stop()
         self.wal.close()
         self.manifest.close()
         try:
@@ -226,13 +372,21 @@ class DurableStorage:
 
 
 def open_store(root: str, cfg: Optional[StoreConfig] = None, *,
-               wal_sync: str = "batch", wal_sync_interval: float = 0.05
-               ) -> LSMGraph:
+               wal_sync: str = "batch", wal_sync_interval: float = 0.05,
+               wal_retain: int = 2, on_corruption: str = "degrade",
+               scrub_interval: Optional[float] = None) -> LSMGraph:
     """Open (or create) a durable ``LSMGraph`` rooted at ``root``.
 
     Fresh directory: requires ``cfg``; writes the manifest "open" record.
     Existing directory: recovers (manifest replay + segment load + WAL tail
-    replay); ``cfg`` may be omitted — it is restored from the manifest."""
+    replay); ``cfg`` may be omitted — it is restored from the manifest.
+
+    Failure handling knobs (see the package docstring's failure model):
+    ``wal_retain`` keeps that many prunable WAL generations for segment
+    rebuild; ``on_corruption`` = "degrade" serves around an unrebuildable
+    corrupt segment (its vertex range reported degraded) while "raise"
+    fails the open; ``scrub_interval`` (seconds) arms background CRC
+    scrubbing."""
     os.makedirs(root, exist_ok=True)
     if Manifest.exists(root):
         # A crash during the very first "open" append leaves an empty/torn
@@ -241,7 +395,9 @@ def open_store(root: str, cfg: Optional[StoreConfig] = None, *,
         if Manifest.load_state(root).n_records > 0:
             from .recovery import recover
             return recover(root, cfg, wal_sync=wal_sync,
-                           wal_sync_interval=wal_sync_interval)
+                           wal_sync_interval=wal_sync_interval,
+                           wal_retain=wal_retain, on_corruption=on_corruption,
+                           scrub_interval=scrub_interval)
         # Drop the dead file: appending after a torn line would corrupt the
         # fresh "open" record too (replay stops at the first bad line).
         from .manifest import MANIFEST_NAME
@@ -250,7 +406,9 @@ def open_store(root: str, cfg: Optional[StoreConfig] = None, *,
         raise ValueError(f"{root}: no usable manifest found and no config "
                          "given")
     storage = DurableStorage(root, wal_sync=wal_sync,
-                             wal_sync_interval=wal_sync_interval)
+                             wal_sync_interval=wal_sync_interval,
+                             wal_retain=wal_retain, on_corruption=on_corruption,
+                             scrub_interval=scrub_interval)
     storage.manifest.append({
         "op": "open", "format": 1, "config": dataclasses.asdict(cfg)})
     store = LSMGraph(cfg, durability=storage)

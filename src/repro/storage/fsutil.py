@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import os
 
+from . import faultfs
+
 
 def fsync_dir(dirname: str) -> None:
     """Fsync a directory so a just-created/renamed/unlinked entry survives
@@ -12,6 +14,6 @@ def fsync_dir(dirname: str) -> None:
     segment whose directory entry vanished — an unrecoverable store."""
     fd = os.open(dirname or ".", os.O_RDONLY)
     try:
-        os.fsync(fd)
+        faultfs.fsync(fd, dirname or ".")
     finally:
         os.close(fd)

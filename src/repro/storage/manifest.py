@@ -12,9 +12,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import zlib
 from typing import Dict, List, Optional
 
+from . import faultfs
+from .errors import DurabilityLost
 from .fsutil import fsync_dir
 
 MANIFEST_NAME = "MANIFEST.log"
@@ -26,6 +29,7 @@ class ManifestState:
     """Folded result of replaying the edit log."""
 
     segments: Dict[int, dict] = dataclasses.field(default_factory=dict)
+    quarantined: Dict[int, dict] = dataclasses.field(default_factory=dict)
     tau: int = 0
     wal_floor: int = 0
     next_fid: int = 0
@@ -45,6 +49,18 @@ class ManifestState:
             self.wal_floor = max(self.wal_floor,
                                  int(rec.get("wal_floor", 0)))
             self.next_fid = max(self.next_fid, int(rec.get("next_fid", 0)))
+        elif op == "quarantine":
+            # A CRC-failed segment left the live set; its bytes (if any)
+            # moved under quarantine/.  Kept folded so recovery knows the
+            # range is degraded until a later "rebuild" supersedes it.
+            fid = int(rec["fid"])
+            self.segments.pop(fid, None)
+            self.quarantined[fid] = rec
+        elif op == "rebuild":
+            for desc in rec.get("add", ()):
+                fid = int(desc["fid"])
+                self.segments[fid] = desc
+                self.quarantined.pop(fid, None)
         self.n_records += 1
 
 
@@ -78,6 +94,10 @@ class Manifest:
             self._truncate_to_valid_prefix()
         self._fd = os.open(self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND,
                            0o644)
+        self._failed = False  # sticky: one failed publish latches fail-stop
+        # Publishes used to come only from the (serialized) flush/compact
+        # path; quarantine events can now arrive from reader threads too.
+        self._append_lock = threading.Lock()
         if not existed:
             fsync_dir(root)  # make the directory entry itself durable
 
@@ -96,10 +116,27 @@ class Manifest:
 
     def append(self, rec: dict) -> int:
         """Append + fsync one edit record; returns bytes written.  Edits are
-        rare (one per flush/compaction) so the fsync is off the ingest path."""
+        rare (one per flush/compaction) so the fsync is off the ingest path.
+
+        A failed write/fsync latches sticky fail-stop (same fsyncgate logic
+        as the WAL): a torn manifest line hides every later record from
+        replay, so appending past a failure would publish edits a reopen
+        silently drops."""
         data = _frame(rec)
-        os.write(self._fd, data)
-        os.fsync(self._fd)
+        with self._append_lock:
+            if self._failed:
+                raise DurabilityLost(
+                    "manifest publish previously failed: edit-log durability "
+                    "is unknown (fail-stop; reopen the store to recover)")
+            try:
+                faultfs.write(self._fd, data, self.path)
+                faultfs.fsync(self._fd, self.path)
+            except OSError as e:
+                self._failed = True
+                if isinstance(e, DurabilityLost):
+                    raise
+                raise DurabilityLost(
+                    f"manifest publish failed: {e}") from e
         return len(data)
 
     def close(self) -> None:

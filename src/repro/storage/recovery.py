@@ -26,15 +26,18 @@ import numpy as np
 from ..core import index as mlindex
 from ..core.store import LSMGraph
 from ..core.types import RunFile, StoreConfig
+from . import scrub as scrub_mod
 from . import segments as seg_mod
 from .engine import SEGMENT_DIR, WAL_DIR, DurableStorage
+from .errors import CorruptionError, DegradedRange, retry_transient
 from .manifest import Manifest
 from .wal import scan_wal_dir
 
 
 def recover(root: str, cfg: Optional[StoreConfig] = None, *,
-            wal_sync: str = "batch", wal_sync_interval: float = 0.05
-            ) -> LSMGraph:
+            wal_sync: str = "batch", wal_sync_interval: float = 0.05,
+            wal_retain: int = 2, on_corruption: str = "degrade",
+            scrub_interval: Optional[float] = None) -> LSMGraph:
     """Reopen ``root``; returns a durable ``LSMGraph`` with the pre-crash
     state restored."""
     st = Manifest.load_state(root)
@@ -56,7 +59,9 @@ def recover(root: str, cfg: Optional[StoreConfig] = None, *,
 
     storage = DurableStorage(
         root, wal_sync=wal_sync, wal_sync_interval=wal_sync_interval,
-        wal_start_seq=wal_max_seq + 1, wal_last_ts=wal_last_ts)
+        wal_start_seq=wal_max_seq + 1, wal_last_ts=wal_last_ts,
+        wal_retain=wal_retain, on_corruption=on_corruption,
+        scrub_interval=scrub_interval)
     try:
         return _recover_into(storage, root, cfg, st, wal_records)
     except BaseException:
@@ -70,10 +75,30 @@ def recover(root: str, cfg: Optional[StoreConfig] = None, *,
 def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
                   st, wal_records) -> LSMGraph:
     store = LSMGraph(cfg, durability=None)  # build empty, then restore state
+    seg_dir = os.path.join(root, SEGMENT_DIR)
+    wal_dir = os.path.join(root, WAL_DIR)
+
+    # -- previously-quarantined ranges: retry the WAL rebuild first (the
+    #    retained generation may still be on disk even if the last
+    #    incarnation's serving path could not repair inline).
+    for fid, qrec in sorted(st.quarantined.items()):
+        desc = qrec.get("desc")
+        if desc is not None and scrub_mod.rebuild_segment_from_wal(
+                wal_dir, desc, os.path.join(seg_dir, desc["file"])):
+            storage.mark_rebuilt(desc)
+            st.segments[fid] = desc
+        elif desc is not None:
+            if storage.on_corruption == "raise":
+                raise CorruptionError(
+                    f"segment fid={fid} is quarantined and not rebuildable",
+                    fid=fid)
+            with storage._deg_lock:
+                storage.degraded[fid] = DegradedRange(
+                    int(desc["min_vid"]), int(desc["max_vid"]), int(fid),
+                    qrec.get("reason", "quarantined"))
 
     # -- load live segments; GC orphans (crashed publish attempts).
     live_files = {desc["file"] for desc in st.segments.values()}
-    seg_dir = os.path.join(root, SEGMENT_DIR)
     for name in os.listdir(seg_dir):
         if name not in live_files:
             try:
@@ -83,18 +108,26 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
     for fid in sorted(st.segments):
         desc = st.segments[fid]
         path = os.path.join(seg_dir, desc["file"])
-        meta, run = seg_mod.read_segment(path)
-        store.io.segment_read += os.path.getsize(path)
-        for key in ("fid", "level", "min_vid", "max_vid", "nv", "ne"):
-            if meta[key] != desc[key]:
-                raise ValueError(
-                    f"{path}: header {key}={meta[key]} disagrees with "
-                    f"manifest {desc[key]}")
+        try:
+            run = _load_checked(store, path, desc)
+        except CorruptionError as e:
+            # Quarantine + rebuild from the retained WAL generation; an
+            # unrebuildable segment degrades its range (serve around it)
+            # or fails the open, per policy.
+            storage.quarantine_segment(path, desc, str(e))
+            if scrub_mod.rebuild_segment_from_wal(wal_dir, desc, path):
+                storage.mark_rebuilt(desc)
+                run = _load_checked(store, path, desc)
+            elif storage.on_corruption == "raise":
+                raise
+            else:
+                continue
         rf = RunFile(
             fid=fid, level=desc["level"], arrays=run,
             min_vid=desc["min_vid"], max_vid=desc["max_vid"],
             created_ts=desc["created_ts"], nv=desc["nv"], ne=desc["ne"],
-            path=path, loader=storage.make_loader(path))
+            path=path, loader=storage.make_loader(path, desc), io=store.io)
+        storage.seg_descs[fid] = desc
         store.levels[rf.level].append(rf)
         store.runs_by_fid[fid] = rf
     for lvl in range(cfg.n_levels):
@@ -147,6 +180,25 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
                              np.asarray(prop)[keep])
     store._publish()
     return store
+
+
+def _load_checked(store: LSMGraph, path: str, desc: dict):
+    """Segment load for recovery: bounded retry on transient I/O, typed
+    ``CorruptionError`` when the header disagrees with the manifest."""
+    def attempt():
+        return seg_mod.read_segment(path)
+
+    def note(_e):
+        store.io.read_retries += 1
+
+    meta, run = retry_transient(attempt, on_retry=note)
+    store.io.segment_read += os.path.getsize(path)
+    for key in ("fid", "level", "min_vid", "max_vid", "nv", "ne"):
+        if meta[key] != desc[key]:
+            raise CorruptionError(
+                f"{path}: header {key}={meta[key]} disagrees with "
+                f"manifest {desc[key]}", fid=desc["fid"])
+    return run
 
 
 __all__ = ["recover"]

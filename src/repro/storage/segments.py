@@ -19,6 +19,8 @@ import numpy as np
 
 from ..core import csr
 from ..core.types import CSRRunArrays, RunFile
+from . import faultfs
+from .errors import CorruptionError, TransientIOError
 from .fsutil import fsync_dir as _fsync_dir
 
 MAGIC = b"LSMGSEG1"
@@ -67,14 +69,22 @@ def write_segment(path: str, rf: RunFile) -> int:
     ))
     hdr = _pack_header(rf, zlib.crc32(body))
     tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        f.write(hdr)
-        f.write(body)
-        f.flush()
-        os.fsync(f.fileno())
+    fd = os.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
+    try:
+        _write_all(fd, hdr, path)
+        _write_all(fd, body, path)
+        faultfs.fsync(fd, path)
+    finally:
+        os.close(fd)
     os.replace(tmp, path)
     _fsync_dir(os.path.dirname(path))
     return len(hdr) + len(body)
+
+
+def _write_all(fd: int, data: bytes, path: str) -> None:
+    view = memoryview(data)
+    while view:
+        view = view[faultfs.write(fd, view, path):]
 
 
 def _pack_header(rf: RunFile, body_crc: int) -> bytes:
@@ -86,23 +96,64 @@ def _pack_header(rf: RunFile, body_crc: int) -> bytes:
 
 
 def read_segment_header(path: str) -> dict:
-    """Parse + CRC-check the 64-byte header only (cheap metadata peek)."""
-    with open(path, "rb") as f:
-        raw = f.read(_HDR.size)
+    """Parse + CRC-check the 64-byte header only (cheap metadata peek).
+
+    Failure typing: medium errors (EIO, mmap fault) raise
+    ``TransientIOError`` (retryable); wrong bytes (bad magic/CRC/version,
+    truncation, missing live file) raise ``CorruptionError`` (never
+    retryable — re-reading rot yields rot)."""
+    try:
+        faultfs.check_read(path)
+        with open(path, "rb") as f:
+            raw = f.read(_HDR.size)
+    except FileNotFoundError as e:
+        raise CorruptionError(f"segment {path}: live file missing") from e
+    except OSError as e:
+        raise TransientIOError(
+            e.errno or 5, f"segment {path}: header read failed") from e
     if len(raw) != _HDR.size:
-        raise ValueError(f"segment {path}: truncated header")
+        raise CorruptionError(f"segment {path}: truncated header")
     (magic, ver, hcrc, body_crc, level, fid, min_vid, max_vid,
      created_ts, nv, ne) = _HDR.unpack(raw)
     if magic != MAGIC:
-        raise ValueError(f"segment {path}: bad magic")
+        raise CorruptionError(f"segment {path}: bad magic")
     if ver != FORMAT_VERSION:
-        raise ValueError(f"segment {path}: unsupported version {ver}")
+        raise CorruptionError(f"segment {path}: unsupported version {ver}")
     zeroed = _HDR.pack(magic, ver, 0, body_crc, level, fid, min_vid,
                        max_vid, created_ts, nv, ne)
     if zlib.crc32(zeroed) != hcrc:
-        raise ValueError(f"segment {path}: header CRC mismatch")
+        raise CorruptionError(f"segment {path}: header CRC mismatch")
     return dict(fid=fid, level=level, min_vid=min_vid, max_vid=max_vid,
                 created_ts=created_ts, nv=nv, ne=ne, body_crc=body_crc)
+
+
+def body_nbytes(nv: int, ne: int) -> int:
+    """Exact body size for a segment with ``nv`` vertices / ``ne`` edges."""
+    return 4 * (nv + (nv + 1) + ne + ne) + ne + 4 * ne
+
+
+def verify_segment(path: str) -> dict:
+    """CRC-verify header + body without materializing run arrays (the
+    scrubber's cheap integrity pass).  Returns the header meta; raises
+    ``CorruptionError`` / ``TransientIOError`` like ``read_segment``."""
+    meta = read_segment_header(path)
+    nv, ne = meta["nv"], meta["ne"]
+    try:
+        mm = np.memmap(path, dtype=np.uint8, mode="r", offset=_HDR.size)
+    except FileNotFoundError as e:
+        raise CorruptionError(f"segment {path}: live file missing",
+                              fid=meta["fid"]) from e
+    except OSError as e:
+        raise TransientIOError(
+            e.errno or 5, f"segment {path}: body mmap failed") from e
+    need = body_nbytes(nv, ne)
+    if mm.shape[0] < need:
+        raise CorruptionError(f"segment {path}: truncated body",
+                              fid=meta["fid"])
+    if zlib.crc32(mm[:need]) != meta["body_crc"]:
+        raise CorruptionError(f"segment {path}: body CRC mismatch",
+                              fid=meta["fid"])
+    return meta
 
 
 def read_segment(path: str, *, verify: bool = True
@@ -113,14 +164,23 @@ def read_segment(path: str, *, verify: bool = True
     page cache; arrays are copied onto the device on conversion."""
     meta = read_segment_header(path)
     nv, ne = meta["nv"], meta["ne"]
-    mm = np.memmap(path, dtype=np.uint8, mode="r", offset=_HDR.size)
+    try:
+        mm = np.memmap(path, dtype=np.uint8, mode="r", offset=_HDR.size)
+    except FileNotFoundError as e:
+        raise CorruptionError(f"segment {path}: live file missing",
+                              fid=meta["fid"]) from e
+    except OSError as e:
+        raise TransientIOError(
+            e.errno or 5, f"segment {path}: body mmap failed") from e
     need = 4 * (nv + (nv + 1) + ne + ne) + ne + 4 * ne
     if mm.shape[0] < need:
-        raise ValueError(f"segment {path}: truncated body")
+        raise CorruptionError(f"segment {path}: truncated body",
+                              fid=meta["fid"])
     # crc32 accepts the buffer protocol: no .tobytes() copy of the whole
     # mmapped body — cold loads stay page-cache-streamed.
     if verify and zlib.crc32(mm[:need]) != meta["body_crc"]:
-        raise ValueError(f"segment {path}: body CRC mismatch")
+        raise CorruptionError(f"segment {path}: body CRC mismatch",
+                              fid=meta["fid"])
     off = 0
 
     def take(dtype, count):

@@ -24,6 +24,8 @@ from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+from . import faultfs
+from .errors import DurabilityLost
 from .fsutil import fsync_dir
 
 
@@ -172,7 +174,8 @@ class WriteAheadLog:
         self._next_commit_seq = self._seq_base
         self._appended_seq = self._seq_base - 1
         self._durable_seq = self._seq_base - 1
-        self._fd = os.open(_wal_path(wal_dir, self._seq),
+        self._path = _wal_path(wal_dir, self._seq)
+        self._fd = os.open(self._path,
                            os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
         if sync != "off":
             fsync_dir(wal_dir)  # durable directory entry for the new file
@@ -192,7 +195,15 @@ class WriteAheadLog:
         the commit-seq / fsyncgate protocol cannot desynchronize."""
         with self._io_lock:
             self._check_failed()
-            os.write(self._fd, rec)
+            try:
+                faultfs.write(self._fd, rec, self._path)
+            except OSError:
+                # A torn append leaves garbage at the tail; replay stops at
+                # the first torn record, so any LATER append would be
+                # silently dropped even if durably written and acked.
+                # Latch fail-stop — same sticky semantics as a failed fsync.
+                self._sync_failed = True
+                raise
             seq = self._next_commit_seq
             self._next_commit_seq += 1
             self._appended_seq = seq
@@ -236,10 +247,11 @@ class WriteAheadLog:
                 if self._fd < 0 or not self._dirty.is_set():
                     return
                 fd = os.dup(self._fd)
+                path = self._path
                 upto = self._appended_seq  # every seq <= upto is in the file
                 self._dirty.clear()
             try:
-                os.fsync(fd)
+                faultfs.fsync(fd, path)
             except OSError:
                 # fsyncgate: the kernel may mark pages clean after a FAILED
                 # fsync, so retrying cannot restore durability.  Latch a
@@ -292,14 +304,14 @@ class WriteAheadLog:
         """fsync under the io lock, latching the fail-stop flag on error
         (the inline-fsync twin of sync()'s fsyncgate handling)."""
         try:
-            os.fsync(fd)
+            faultfs.fsync(fd, self._path)
         except OSError:
             self._sync_failed = True
             raise
 
     def _check_failed(self) -> None:
         if self._sync_failed:
-            raise OSError(
+            raise DurabilityLost(
                 "WAL fsync previously failed: log durability is unknown "
                 "(fail-stop; reopen the store to recover from disk state)")
 
@@ -322,28 +334,32 @@ class WriteAheadLog:
             os.close(self._fd)
             self._seq += 1
             self._last_ts[self._seq] = -1
-            self._fd = os.open(_wal_path(self.dir, self._seq),
+            self._path = _wal_path(self.dir, self._seq)
+            self._fd = os.open(self._path,
                                os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
             if self.sync_mode != "off":
                 fsync_dir(self.dir)
             return self._seq
 
-    def prune(self, floor_ts: int) -> int:
+    def prune(self, floor_ts: int, retain: int = 0) -> int:
         """Delete closed WAL files whose every record has ts < floor_ts
-        (they are durably represented by flushed segments).  Returns the
-        number of files removed."""
+        (they are durably represented by flushed segments).  ``retain``
+        keeps the newest N otherwise-prunable files on disk anyway — they
+        are the rebuild source for a recently-flushed L0 segment that later
+        fails its CRC (see scrub.rebuild_from_wal).  Returns the number of
+        files removed."""
         removed = 0
         with self._io_lock:
-            for seq in sorted(self._last_ts):
-                if seq == self._seq:
-                    continue  # active file
-                if self._last_ts[seq] < floor_ts:
-                    try:
-                        os.unlink(_wal_path(self.dir, seq))
-                    except FileNotFoundError:
-                        pass
-                    del self._last_ts[seq]
-                    removed += 1
+            prunable = [seq for seq in sorted(self._last_ts)
+                        if seq != self._seq and self._last_ts[seq] < floor_ts]
+            victims = prunable[:-retain] if retain > 0 else prunable
+            for seq in victims:
+                try:
+                    os.unlink(_wal_path(self.dir, seq))
+                except FileNotFoundError:
+                    pass
+                del self._last_ts[seq]
+                removed += 1
             if removed and self.sync_mode != "off":
                 fsync_dir(self.dir)
         return removed
@@ -374,7 +390,7 @@ class WriteAheadLog:
                         # unknown: close best-effort, but never claim the
                         # tail durable (sync_upto must keep failing).
                         if not self._sync_failed:
-                            os.fsync(self._fd)
+                            faultfs.fsync(self._fd, self._path)
                             self._durable_seq = self._appended_seq
                     except OSError:
                         self._sync_failed = True

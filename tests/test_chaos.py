@@ -1,0 +1,358 @@
+"""Fault injection, failure isolation, and degraded-mode serving.
+
+Covers the survive-the-disk contract: the ``faultfs`` injection seam, the
+typed error taxonomy + bounded retry, segment quarantine/rebuild, the
+background scrubber, per-shard fencing with degraded reads and
+``reopen_shard`` healing, and the randomized chaos harness's invariants.
+"""
+import glob
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from conftest import small_store_cfg
+from repro.core.concurrent import ConcurrentLSMGraph
+from repro.core.types import StoreConfig
+from repro.shard.store import (DegradedReport, ShardUnavailable,
+                               open_sharded_store)
+from repro.storage import faultfs, open_store
+from repro.storage.chaostest import run_schedule
+from repro.storage.errors import (CorruptionError, DurabilityLost,
+                                  StorageError, TransientIOError,
+                                  retry_transient)
+
+
+def _durable_cfg(**kw):
+    base = dict(vmax=1 << 12, mem_edges=1 << 12, l0_run_limit=64)
+    base.update(kw)
+    return StoreConfig(**base)
+
+
+def _fill(g, n=600, vmax=1 << 12, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, vmax, n).astype(np.int64)
+    dst = rng.integers(0, vmax, n).astype(np.int64)
+    g.insert_edges(src, dst)
+    return set(zip(src.tolist(), dst.tolist()))
+
+
+# ------------------------------------------------------------- error taxonomy
+def test_error_taxonomy_backward_compat():
+    assert issubclass(TransientIOError, OSError)
+    assert issubclass(CorruptionError, ValueError)
+    assert issubclass(DurabilityLost, OSError)
+    assert issubclass(TransientIOError, StorageError)
+    assert TransientIOError(5, "eio").transient is True
+    assert CorruptionError("bad", fid=3).fid == 3
+    assert DurabilityLost("gone", shard=2).shard == 2
+
+
+def test_retry_transient_retries_then_succeeds():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientIOError(5, "injected")
+        return "ok"
+
+    retried = []
+    assert retry_transient(flaky, on_retry=retried.append) == "ok"
+    assert len(calls) == 3 and len(retried) == 2
+
+
+def test_retry_transient_never_retries_corruption():
+    calls = []
+
+    def broken():
+        calls.append(1)
+        raise CorruptionError("CRC mismatch")
+
+    with pytest.raises(CorruptionError):
+        retry_transient(broken)
+    assert len(calls) == 1  # corruption is not transient: one attempt only
+
+
+# ------------------------------------------------------------------- faultfs
+def test_faultfs_disarmed_is_passthrough(tmp_path):
+    assert not faultfs.is_armed()
+    p = str(tmp_path / "f")
+    fd = os.open(p, os.O_WRONLY | os.O_CREAT)
+    faultfs.write(fd, b"hello", p)
+    faultfs.fsync(fd, p)
+    os.close(fd)
+    faultfs.check_read(p)
+    assert open(p, "rb").read() == b"hello"
+
+
+def test_faultfs_rules_fire_and_disarm(tmp_path):
+    p = str(tmp_path / "target")
+    fd = os.open(p, os.O_WRONLY | os.O_CREAT)
+    with faultfs.fault_plan() as plan:
+        plan.add(faultfs.FaultRule(op="fsync", match="target", count=1))
+        with pytest.raises(OSError):
+            faultfs.fsync(fd, p)
+        faultfs.fsync(fd, p)  # count exhausted: passes through
+        assert plan.fired_log == [("fsync", p)]
+    assert not faultfs.is_armed()  # context manager always clears
+    os.close(fd)
+
+
+def test_faultfs_torn_write_leaves_prefix(tmp_path):
+    p = str(tmp_path / "torn")
+    fd = os.open(p, os.O_WRONLY | os.O_CREAT)
+    with faultfs.fault_plan() as plan:
+        plan.add(faultfs.FaultRule(op="write", match="torn", tear_at=3))
+        with pytest.raises(OSError):
+            faultfs.write(fd, b"abcdef", p)
+    os.close(fd)
+    assert open(p, "rb").read() == b"abc"
+
+
+# -------------------------------------------- quarantine / rebuild / degrade
+def test_corrupt_segment_quarantined_and_rebuilt_at_reopen(tmp_path):
+    root = str(tmp_path / "store")
+    g = open_store(root, _durable_cfg(), wal_sync="always")
+    edges = _fill(g)
+    g.flush_memgraph()
+    seg = sorted(glob.glob(os.path.join(root, "segments", "*.csr")))[-1]
+    want_bytes = open(seg, "rb").read()
+    g.durability.evict_all_segments()
+    faultfs.flip_bit(seg)
+
+    # Serving path: typed error with the degraded range attached, never a
+    # bare ValueError/crash; the bad file lands in quarantine/.
+    with pytest.raises(CorruptionError) as ei:
+        with g.snapshot() as snap:
+            snap.edge_set()
+    assert ei.value.ranges
+    assert g.degraded_ranges()
+    assert glob.glob(os.path.join(root, "quarantine", "*"))
+    # Healthy vertices (outside the degraded range) still answer.
+    (rng_lo, rng_hi) = g.degraded_ranges()[0].lo, g.degraded_ranges()[0].hi
+    healthy = [v for v in range(1 << 12) if not rng_lo <= v <= rng_hi][:8]
+    with g.snapshot() as snap:
+        snap.neighbors_batch(np.array(healthy, np.int64))
+    g.close()
+
+    # Reopen: the retained WAL generation rebuilds the segment
+    # byte-identically and the degraded range clears.
+    g2 = open_store(root)
+    assert g2.degraded_ranges() == ()
+    assert open(seg, "rb").read() == want_bytes
+    with g2.snapshot() as snap:
+        assert snap.edge_set() == edges
+    g2.close()
+
+
+def test_scrubber_heals_resident_and_evicted(tmp_path):
+    root = str(tmp_path / "store")
+    g = open_store(root, _durable_cfg(), wal_sync="always")
+    edges = _fill(g)
+    g.flush_memgraph()
+    seg = sorted(glob.glob(os.path.join(root, "segments", "*.csr")))[-1]
+
+    # Resident arrays: scrub rewrites the file in place from RAM.
+    faultfs.flip_bit(seg)
+    stats = g.durability.scrub_once()
+    assert stats["healed_resident"] == 1
+    # Evicted arrays: scrub quarantines + rebuilds from the retained WAL.
+    g.durability.evict_all_segments()
+    faultfs.flip_bit(seg)
+    stats = g.durability.scrub_once()
+    assert stats["rebuilt"] == 1
+    assert g.degraded_ranges() == ()
+    with g.snapshot() as snap:
+        assert snap.edge_set() == edges
+    g.close()
+
+
+def test_wal_fsync_failure_latches_fail_stop(tmp_path):
+    root = str(tmp_path / "store")
+    g = open_store(root, _durable_cfg(), wal_sync="always")
+    seq = g.insert_edges(np.array([1, 2]), np.array([3, 4]))
+    g.ack(seq)
+    with faultfs.fault_plan() as plan:
+        plan.add(faultfs.FaultRule(op="fsync", match="wal-", count=1))
+        with pytest.raises(OSError):
+            g.insert_edges(np.array([5]), np.array([6]))
+    # Sticky: the latch types every later write, fault long gone or not.
+    with pytest.raises(DurabilityLost):
+        g.insert_edges(np.array([7]), np.array([8]))
+    g.close()
+    # The acked prefix survives reopen (the failed batch may too — its
+    # append landed; only its durability was unproven).
+    g2 = open_store(root)
+    with g2.snapshot() as snap:
+        assert {(1, 3), (2, 4)} <= snap.edge_set()
+    g2.close()
+
+
+# -------------------------------------------------- satellite 3: prefetch I/O
+def test_prefetch_retries_transient_eio(tmp_path):
+    root = str(tmp_path / "store")
+    g = open_store(root, _durable_cfg(), wal_sync="always")
+    _fill(g)
+    g.flush_memgraph()
+    g.durability.evict_all_segments()
+    rf = next(iter(g.runs_by_fid.values()))
+    assert rf.arrays is None
+    with faultfs.fault_plan() as plan:
+        plan.add(faultfs.FaultRule(op="read", match=".csr", count=2))
+        with ThreadPoolExecutor(1) as pool:
+            assert rf.prefetch(pool)
+        deadline = time.time() + 5
+        while rf.arrays is None and time.time() < deadline:
+            time.sleep(0.01)
+    assert rf.arrays is not None          # retried through the EIOs
+    assert g.io.prefetch_retries >= 1     # counted on the prefetch counter
+    assert g.io.read_retries == 0         # not conflated with foreground
+    g.close()
+
+
+# ------------------------------------------- satellite 2: close() leak report
+def test_close_reports_wedged_compactor(monkeypatch):
+    g = ConcurrentLSMGraph(small_store_cfg())
+    release = threading.Event()
+    monkeypatch.setattr(ConcurrentLSMGraph, "_WRITER_JOIN_TIMEOUT", 0.5)
+    monkeypatch.setattr(ConcurrentLSMGraph, "_COMPACTOR_JOIN_TIMEOUT", 0.5)
+    monkeypatch.setattr(g.store, "flush_memgraph",
+                        lambda: release.wait(30))
+    monkeypatch.setattr("repro.core.memgraph.memgraph_should_flush",
+                        lambda mem, cfg: True)
+    g._compact_request.set()
+    deadline = time.time() + 5
+    while g._busy["compactor"] is None and time.time() < deadline:
+        time.sleep(0.01)  # wait for the compactor to enter the wedged flush
+    with pytest.raises(RuntimeError, match=r"leaked background.*compactor"
+                                           r".*flush_memgraph"):
+        g.close()
+    release.set()
+    g._writer.join(timeout=5)
+    g._compactor.join(timeout=5)
+    assert not g._compactor.is_alive()
+    g.store.close()
+
+
+# --------------------------------------- shard fencing + degraded-mode reads
+def test_sharded_degraded_mode_and_reopen_heal(tmp_path):
+    root = str(tmp_path / "shards")
+    vmax = 4096
+    g = open_sharded_store(root, _durable_cfg(vmax=vmax), n_shards=4,
+                           wal_sync="always")
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, vmax, 2000).astype(np.int64)
+    dst = rng.integers(0, vmax, 2000).astype(np.int64)
+    g.ack(g.insert_edges(src, dst))
+    g.flush_all()
+    with g.snapshot() as s:
+        oracle = s.edge_set()
+
+    seg = sorted(glob.glob(os.path.join(root, "shard-01", "segments",
+                                        "*.csr")))[-1]
+    faultfs.flip_bit(seg)
+    for shard in g.shards:
+        shard.durability.evict_all_segments()
+
+    qs = np.arange(0, vmax, 5, dtype=np.int64)
+    with g.snapshot() as s:
+        res, rep = s.neighbors_batch(qs, with_report=True)
+    assert isinstance(rep, DegradedReport) and not rep.ok
+    assert rep.shards == (1,)
+    lo, hi = g.part.shard_range(1)
+    # Every masked position is inside shard 1's range; every healthy
+    # position answers exactly what the pre-corruption oracle says.
+    masked = set(rep.positions.tolist())
+    by_src = {}
+    for (u, v) in oracle:
+        by_src.setdefault(u, set()).add(v)
+    for i, q in enumerate(qs.tolist()):
+        if i in masked:
+            assert lo <= q < hi
+        else:
+            assert set(np.asarray(res[i]).tolist()) == by_src.get(q, set())
+    assert g.health_report()[1]["status"] == "fenced"
+
+    # Writes touching the fenced shard: whole-batch backpressure; healthy
+    # shards keep accepting.
+    with pytest.raises(ShardUnavailable) as ei:
+        g.insert_edges(np.array([lo, 0], np.int64), np.array([1, 2], np.int64))
+    assert ei.value.shards == (1,)
+    g.ack(g.insert_edges(np.array([0], np.int64), np.array([9], np.int64)))
+
+    # reopen_shard heals: recovery rebuilds the quarantined segment from
+    # the retained WAL generation; full oracle equivalence returns.
+    g.reopen_shard(1)
+    assert g.fenced() == {}
+    with g.snapshot() as s:
+        assert s.edge_set() == oracle | {(0, 9)}
+    g.close()
+
+
+def test_sharded_ack_attributes_durability_loss(tmp_path):
+    """Satellite regression: a latched shard's ack failure surfaces as
+    DurabilityLost(shard=s), the shard fences, and sibling acks complete."""
+    root = str(tmp_path / "shards")
+    vmax = 1024
+    # Long group-commit interval: the batch stays unsynced until ack pulls
+    # the fsync (which the plan fails, unlimited count — whoever fsyncs
+    # first, ack or the background thread, the latch types the ack).
+    g = open_sharded_store(root, _durable_cfg(vmax=vmax), n_shards=2,
+                           wal_sync="batch", wal_sync_interval=30.0)
+    with faultfs.fault_plan() as plan:
+        plan.add(faultfs.FaultRule(op="fsync", match="shard-01/wal",
+                                   count=-1))
+        receipt = g.insert_edges(np.array([10, 600], np.int64),
+                                 np.array([11, 601], np.int64))
+        assert set(receipt.seqs) == {0, 1}
+        with pytest.raises(DurabilityLost) as ei:
+            g.ack(receipt)
+        assert ei.value.shard == 1
+    assert set(g.fenced()) == {1}
+    # Shard 0's half of the batch is acked durable and writable.
+    g.ack(g.insert_edges(np.array([20], np.int64), np.array([21], np.int64)))
+    g.close()
+    g2 = open_sharded_store(root)
+    with g2.snapshot() as s:
+        assert {(10, 11), (20, 21)} <= s.edge_set()
+    g2.close()
+
+
+# -------------------------------------------------------- randomized schedules
+@pytest.mark.parametrize("seed", range(6))
+def test_chaos_schedule_invariants(seed):
+    stats = run_schedule(seed)
+    assert stats["recovered_prefix"] >= stats["acked"]
+
+
+@pytest.mark.slow
+def test_chaos_hundred_schedules():
+    for seed in range(100, 200):
+        stats = run_schedule(seed)
+        assert stats["recovered_prefix"] >= stats["acked"]
+
+
+# ------------------------------------------- satellite 6: property-based form
+def test_chaos_property_hypothesis():
+    hyp = pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis not installed (see requirements-dev.txt); the "
+               "seeded chaos loop above covers the invariant meanwhile")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(st.integers(min_value=0, max_value=2 ** 20))
+    def prop(seed):
+        # run_schedule derives the whole fault plan + op trace from the
+        # seed, so this searches the joint space of plans and traces and
+        # shrinks to a minimal failing seed.
+        stats = run_schedule(seed)
+        assert stats["recovered_prefix"] >= stats["acked"]
+
+    prop()
