@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 tier1-shard test bench bench-smoke chaos-smoke
+.PHONY: tier1 tier1-shard test bench bench-smoke chaos-smoke lint-locks
 
 # Fast verification gate: everything except the `slow`-marked end-to-end
 # tests (test_distributed.py spawns an 8-device subprocess mesh,
@@ -32,3 +32,9 @@ bench-smoke:
 # Fixed seeds keep it deterministic and under ~30s.
 chaos-smoke:
 	$(PY) -m repro.storage.chaostest --schedules 12 --seed 0
+
+# Lock-discipline gate: AST lint of core/store.py — no device work under
+# the commit lock, no writer-lock acquisition on the snapshot read path
+# (the two invariants the epoch-published StoreState design rests on).
+lint-locks:
+	$(PY) tools/lint_locks.py

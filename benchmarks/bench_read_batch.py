@@ -69,11 +69,10 @@ def _depth_store(root: str, n_runs: int):
 
 
 def _evict_all(g: LSMGraph) -> int:
-    n = 0
-    for lvl in g.levels:
-        for rf in lvl:
-            n += bool(rf.evict())
-    return n
+    # The engine's eviction lever, not a raw per-run evict: it also drops
+    # the state-owned read spine, so the next snapshot truly rebuilds from
+    # disk instead of serving the cached merged view of the evicted bytes.
+    return g.durability.evict_all_segments()
 
 
 def depth_sweep() -> list:

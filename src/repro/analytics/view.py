@@ -46,8 +46,11 @@ class CSRView(NamedTuple):
 # Max sources merged on device by _collect_sorted's tournament; deeper
 # snapshots fall back to one host lexsort.  MERGE_STATS counts which branch
 # ran (tests assert zero host lexsorts for any k <= TOURNAMENT_MAX_SOURCES).
+# The counters live with the merge kernels (kernels/merge.py) and are
+# thread-safe — views run on reader threads concurrently with the spine
+# splicer and the compactor; this module-level name is a shared alias.
 TOURNAMENT_MAX_SOURCES = 8
-MERGE_STATS = {"kernel_merge": 0, "host_lexsort": 0}
+from ..kernels.merge import MERGE_STATS  # noqa: E402  (shared thread-safe counters)
 
 
 def _merge_sources_tournament(sources):
@@ -101,10 +104,10 @@ def _collect_sorted(snapshot: Snapshot):
     if len(sources) == 1:
         src, dst, ts, marker, prop = sources[0]
     elif len(sources) <= TOURNAMENT_MAX_SOURCES:
-        MERGE_STATS["kernel_merge"] += 1
+        MERGE_STATS.bump("kernel_merge")
         src, dst, ts, marker, prop = _merge_sources_tournament(sources)
     else:
-        MERGE_STATS["host_lexsort"] += 1
+        MERGE_STATS.bump("host_lexsort")
         cat = tuple(np.concatenate([s[i] for s in sources])
                     for i in range(5))
         order = np.lexsort((cat[2], cat[1], cat[0]))

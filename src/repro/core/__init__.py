@@ -1,14 +1,59 @@
-"""LSMGraph core — the paper's contribution as composable JAX modules."""
+"""LSMGraph core — the paper's contribution as composable JAX modules.
+
+Concurrency model (epoch-published store state)
+===============================================
+
+The store's entire serving state lives in ONE immutable, atomically-published
+object: ``repro.core.store.StoreState`` — frozen run lists per level, the
+sealed MemGraph tiers (active ``mem`` + rotated ``mem_full``), the
+multi-level index, τ, the degraded-range set, and a handle to the shared
+read spine.  All concurrency follows from three rules:
+
+1. **Publish, never mutate.**  Writers (apply / flush / compaction /
+   recovery / health events) build the next state OFF TO THE SIDE and
+   install it with a single reference assignment (``LSMGraph._swap_state``)
+   — atomic under the GIL, so a reader loading ``store._state`` always sees
+   a complete, internally-consistent epoch.  Nothing reachable from a
+   published ``StoreState`` is ever modified afterwards.
+
+2. **Readers take no writer locks.**  ``snapshot()`` is one atomic load of
+   the published state plus a version-chain pin; the resolve path touches
+   only that frozen state.  ``tools/lint_locks.py`` (wired into tier-1 CI
+   via ``make lint-locks``) statically enforces this: no ``Snapshot`` /
+   read-path method may acquire ``_lock``/``_write_lock``/``_flush_lock``/
+   ``_compact_lock``, and no device work (``jnp``/``jax``/kernel calls) may
+   run inside the commit lock in ``core/store.py``.
+
+3. **Writer locks form a strict hierarchy**, acquired outer-to-inner:
+   ``_compact_lock`` > ``_flush_lock`` > ``_write_lock`` (serializes
+   MemGraph mutators incl. rotation; device work allowed) > ``_lock`` (the
+   short host-only commit lock around ts assignment and the state swap) >
+   ``versions._lock``.  Constant-time helper locks (``_fid_lock``, the
+   spine handle's ``_mu``) are leaves — they never nest another lock.
+
+The **read spine** (the tournament-merged view of all sealed data: on-disk
+runs ⊕ ``mem_full``) is owned by the ``StoreState``, not by individual
+snapshots — every snapshot at the same epoch shares one spine, built at
+most once.  Publishes that do not change sealed data (plain applies) carry
+the spine handle forward untouched, so reader latency stays flat under
+full-rate ingest; flush/compaction publishes install a fresh handle whose
+build *splices* only the changed run streams into the previous spine
+(``_SpineCache``: reuse → splice → rebuild) instead of re-merging the
+world.  Active-MemGraph records are resolved per query batch and override
+sealed winners by the ts tier-dominance invariant (every active-mem ts >
+every mem_full ts > every run ts), keeping results byte-identical to a
+from-scratch merge.
+"""
 from .types import (BYTES_PER_EDGE, BYTES_PER_PROP, INVALID_VID, CSRRunArrays,
                     EdgeBatch, IOCounters, MemGraphState, RunFile, StoreConfig,
                     Version)
-from .store import LSMGraph, Snapshot
+from .store import LSMGraph, Snapshot, StoreState
 from .versions import VersionChain
 from . import csr, index, memgraph
 
 __all__ = [
     "BYTES_PER_EDGE", "BYTES_PER_PROP", "INVALID_VID", "CSRRunArrays",
     "EdgeBatch", "IOCounters", "MemGraphState", "RunFile", "StoreConfig",
-    "Version", "LSMGraph", "Snapshot", "VersionChain", "csr", "index",
-    "memgraph",
+    "Version", "LSMGraph", "Snapshot", "StoreState", "VersionChain", "csr",
+    "index", "memgraph",
 ]

@@ -8,6 +8,12 @@ Wraps the store with:
   * reader API: `snapshot()` pins a consistent (version, index, runs, τ) view
     at any time, including mid-compaction (immutability replaces the paper's
     vertex-grained read-write locks — see DESIGN.md §2.1).
+
+Since the epoch-published StoreState refactor (core/__init__.py,
+"Concurrency model") the wrapper adds no read-side synchronization at all:
+``snapshot()`` is one atomic reference load of the store's published state
+plus a version pin — it never contends with the writer or compactor thread,
+which publish fresh states instead of mutating the one a reader holds.
 """
 from __future__ import annotations
 

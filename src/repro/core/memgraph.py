@@ -337,6 +337,22 @@ def scan_vertices_batch(mg: MemGraphState, vs: jnp.ndarray):
     return qid, dst, ts, marker, prop
 
 
+@jax.jit
+def backbone_stream(mg: MemGraphState):
+    """One MemGraph tier as a read-spine stream (rid = -1: always visible).
+
+    The sealed-tier handoff: a tier frozen by the flush rotate enters the
+    shared per-state read spine through this function, flattened and sorted
+    into (src, dst, ts) order once.  Arrival-ordered, so this stream (alone)
+    pays a per-tier device lexsort; invalid slots already carry
+    src == INVALID_VID and sort to the tail."""
+    src, dst, ts, marker, prop, _n = flush_arrays(mg)
+    order = jnp.lexsort((ts, dst, src))
+    rid = jnp.full(src.shape, -1, jnp.int32)
+    return (src[order], dst[order], ts[order], rid,
+            marker[order], prop[order])
+
+
 def memgraph_should_flush(mg: MemGraphState, cfg: StoreConfig) -> bool:
     """Host-side flush trigger (paper: MemGraph reaches capacity)."""
     return bool(

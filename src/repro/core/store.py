@@ -13,6 +13,14 @@ Host-side orchestration over jit'd array ops:
 Every level holds an ordered list of CSR segment *files* with disjoint vertex
 ranges (L0: overlapping, ordered by fid) — the paper's segmentation — so
 partial compaction replaces only overlapping segment files.
+
+Concurrency: ALL mutable store state lives in one immutable, atomically-
+published ``StoreState`` (epoch publication — see the "Concurrency model"
+doc in ``repro.core.__init__``).  Writers build the next state off to the
+side and install it with a single reference swap under a short host-only
+commit lock; ``snapshot()`` is a lock-free read of the current state, and
+every snapshot at the same sealed epoch shares one ``_ReadBackbone`` via
+the state's ``_SpineHandle``.
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ import numpy as np
 
 from . import csr, index as mlindex, memgraph as mg_mod
 from ..kernels import ops as kops
+from ..kernels.merge import MERGE_STATS as _MERGE_STATS
 from .types import (BYTES_PER_EDGE, BYTES_PER_PROP, INVALID_VID, EdgeBatch,
                     IOCounters, MemGraphState, RunFile, StoreConfig, Version)
 from .versions import VersionChain
@@ -69,8 +78,259 @@ def prefetch_pool() -> ThreadPoolExecutor:
     return _PREFETCH_POOL
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class StoreState:
+    """One immutable, atomically-published store state.
+
+    The epoch-publication recipe: a commit builds every field off to the
+    side and installs the next ``StoreState`` with a single reference swap
+    (atomic under the GIL), so a reader that grabs ``store._state`` holds a
+    complete, internally-consistent view forever — no locks on the read
+    path.  ``runs_by_fid`` is a plain dict but is NEVER mutated after
+    publication (commits build a fresh dict).  ``spine`` is the state's
+    shared, lazily-built read backbone: per-batch writes reuse the previous
+    handle (the active MemGraph is resolved outside the spine), while
+    sealed-membership changes — flush rotate/commit, compaction commit,
+    health change, recovery install — publish a fresh one."""
+
+    epoch: int
+    tau: int
+    mem: MemGraphState
+    mem_id: int
+    mem_full: Optional[MemGraphState]
+    mem_full_id: Optional[int]
+    levels: Tuple[Tuple[RunFile, ...], ...]
+    index: object                     # mlindex arrays (immutable jnp)
+    runs_by_fid: Dict[int, RunFile]   # frozen-by-convention after publish
+    version: Version
+    degraded: tuple                   # DegradedRange tuple at publish time
+    spine: "_SpineHandle"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class _RunSpine:
+    """The merged SEALED-RUN portion of a read spine: every L0/L1+ run's
+    records tournament-merged into one (src, dst, ts)-ordered stream, with
+    ``rid`` = the record's position in ``runs``.  Cached store-wide
+    (`_SpineCache`) so consecutive sealed epochs splice instead of
+    re-merging the world.  ``cols`` are fitted to the half-step quantized
+    capacity; valid records form a sorted ``total``-length prefix (pads
+    carry src == INVALID_VID and sort to the tail)."""
+
+    fids: frozenset
+    runs: Tuple[Tuple[RunFile, int], ...]   # rid order; col < 0 means L0
+    cols: tuple                             # (src,dst,ts,rid,marker,prop)
+    total: int
+
+
+def _fit_spine_cols(cols, total: int):
+    """Pad or trim merged spine columns to the half-step quantized capacity
+    (valid records are a sorted prefix, so trimming only drops pads)."""
+    cap = csr.quantize_cap(total, half_steps=True)
+    n = int(cols[0].shape[0])
+    if n < cap:
+        return _pad_backbone(*cols, pad=cap - n)
+    if n > cap:
+        return tuple(c[:cap] for c in cols)
+    return tuple(cols)
+
+
+def _spine_run_streams(runs, rid_base: int = 0):
+    """Per-run backbone streams (prefetching cold segments first)."""
+    pool = None
+    for rf, _col in runs:
+        if rf.arrays is None:
+            pool = pool or prefetch_pool()
+            rf.prefetch(pool)
+    return [_run_backbone_stream(rf.ensure_loaded(),
+                                 jnp.asarray(rid_base + i, jnp.int32))
+            for i, (rf, _col) in enumerate(runs)]
+
+
+def _build_run_spine(runs) -> _RunSpine:
+    """From-scratch merge of a sealed run set (the cold-cache path)."""
+    runs = tuple(runs)
+    if not runs:
+        z = jnp.zeros((0,), jnp.int32)
+        cols = (z, z, z, z, jnp.zeros((0,), bool),
+                jnp.zeros((0,), jnp.float32))
+        return _RunSpine(frozenset(), (), cols, 0)
+    total = sum(rf.ne for rf, _col in runs)
+    cols = kops.tournament_merge(_spine_run_streams(runs))
+    _MERGE_STATS.bump("spine_build")
+    return _RunSpine(frozenset(rf.fid for rf, _col in runs), runs,
+                     _fit_spine_cols(cols, total), total)
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap",))
+def _filter_remap_spine(src, dst, ts, rid, marker, prop, rid_map,
+                        out_cap: int):
+    """Compress a spine's retained records (rid_map[rid] >= 0) into a dense
+    sorted prefix with remapped rids — the kept side of a splice.  The
+    gather preserves order, so the result is still (src, dst, ts)-sorted."""
+    n = src.shape[0]
+    rid_c = jnp.clip(rid, 0, rid_map.shape[0] - 1)
+    new_rid = jnp.where(rid >= 0, rid_map[rid_c], -1)
+    keep = (src != INVALID_VID) & (new_rid >= 0)
+    idx = jnp.nonzero(keep, size=out_cap, fill_value=n)[0]
+    idx_c = jnp.minimum(idx, n - 1)
+    ok = idx < n
+    return (jnp.where(ok, src[idx_c], INVALID_VID),
+            jnp.where(ok, dst[idx_c], 0),
+            jnp.where(ok, ts[idx_c], 0),
+            jnp.where(ok, new_rid[idx_c], -1),
+            jnp.where(ok, marker[idx_c], False),
+            jnp.where(ok, prop[idx_c], 0.0))
+
+
+def _splice_run_spine(base: _RunSpine, runs) -> _RunSpine:
+    """Incremental spine invalidation: splice a changed run set into an
+    existing merged spine.  Runs surviving from ``base`` keep their
+    already-merged relative order (one jit'd compress + rid remap); only
+    the ADDED runs' streams enter a fresh tournament against that retained
+    stream — re-merge the delta, never the world.  Because every record
+    carries a globally-unique ts, the merged (src, dst, ts) order is
+    independent of merge-tree shape: a spliced spine's valid prefix is
+    byte-identical to a from-scratch build's (rid numbering aside)."""
+    runs = tuple(runs)
+    new_fids = {rf.fid for rf, _col in runs}
+    kept = [(rf, col) for (rf, col) in base.runs if rf.fid in new_fids]
+    kept_fids = {rf.fid for rf, _col in kept}
+    added = [(rf, col) for (rf, col) in runs if rf.fid not in kept_fids]
+    pos = {rf.fid: i for i, (rf, _col) in enumerate(base.runs)}
+    rid_map = np.full(max(len(base.runs), 1), -1, np.int32)
+    for new_i, (rf, _col) in enumerate(kept):
+        rid_map[pos[rf.fid]] = new_i
+    retained_total = sum(rf.ne for rf, _col in kept)
+    out_cap = csr.quantize_cap(max(retained_total, 1))
+    retained = _filter_remap_spine(*base.cols, jnp.asarray(rid_map),
+                                   out_cap=out_cap)
+    streams = [retained] + _spine_run_streams(added, rid_base=len(kept))
+    cols = kops.tournament_merge(streams)
+    total = retained_total + sum(rf.ne for rf, _col in added)
+    _MERGE_STATS.bump("spine_splice")
+    return _RunSpine(frozenset(new_fids), tuple(kept + added),
+                     _fit_spine_cols(cols, total), total)
+
+
+class _SpineCache:
+    """Store-level cache of the newest merged run spine, keyed by fid set.
+
+    ``get`` serves three cases: identical fid set -> reuse outright;
+    overlapping set -> splice the delta; disjoint/cold -> from-scratch
+    build.  Single-slot: states request their spine in (roughly)
+    publication order, so the newest sealed epoch is the right splice
+    base.  Guarded by its own mutex — never a store writer lock, so a
+    reader building here can only wait on a peer reader."""
+
+    def __init__(self) -> None:
+        self._mu = threading.Lock()
+        self._base: Optional[_RunSpine] = None
+
+    def get(self, runs) -> _RunSpine:
+        runs = tuple(runs)
+        fids = frozenset(rf.fid for rf, _col in runs)
+        with self._mu:
+            base = self._base
+            if base is not None and base.fids == fids:
+                return base
+            if base is not None and fids and (base.fids & fids):
+                spine = _splice_run_spine(base, runs)
+            else:
+                spine = _build_run_spine(runs)
+            if fids or base is None:
+                self._base = spine
+            return spine
+
+
+class _SpineHandle:
+    """Lazily-built read backbone shared by EVERY snapshot at one sealed
+    epoch.  Built at most once under a handle-local build latch that no
+    writer ever takes — a reader blocking here waits only on a peer
+    reader's in-flight build, never on a writer-held store lock — and
+    assigned only after full construction, so the old per-Snapshot
+    double-checked-locking race (a half-warm backbone becoming visible)
+    disappears structurally."""
+
+    __slots__ = ("_mu", "_bb")
+
+    def __init__(self) -> None:
+        self._mu = threading.Lock()
+        self._bb: Optional["_ReadBackbone"] = None
+
+    def ready(self) -> bool:
+        return self._bb is not None
+
+    def get(self, state: StoreState, store: "LSMGraph") -> "_ReadBackbone":
+        bb = self._bb
+        if bb is None:
+            with self._mu:
+                bb = self._bb
+                if bb is None:
+                    bb = _build_state_backbone(state, store)
+                    self._bb = bb
+        return bb
+
+
+def _build_state_backbone(state: StoreState, store: "LSMGraph"):
+    """Merge the state's SEALED tiers (L0/L1+ runs via the store's spine
+    cache, plus the rotated-out full MemGraph) into the shared read spine.
+    The ACTIVE MemGraph is deliberately absent: it is resolved per query
+    batch (`_mem_resolve`) and, by the ts tier-dominance invariant (every
+    active record is strictly newer than every sealed record), its visible
+    (src, dst) pairs simply suppress the sealed winners — so per-batch
+    writes never invalidate this spine.  Runs quarantined at publish time
+    (``state.degraded``) are excluded; overlapping queries raise typed
+    errors via the snapshot's degraded check instead."""
+    bad = {r.fid for r in state.degraded}
+    runs: List[Tuple[RunFile, int]] = []
+    for rf in state.levels[0]:
+        if rf.nv > 0 and rf.fid not in bad:
+            runs.append((rf, -1))
+    for col, lvl in enumerate(state.levels[1:]):
+        for rf in lvl:
+            if rf.nv > 0 and rf.fid not in bad:
+                runs.append((rf, col))
+    spine = store._spine_cache.get(runs)
+    cols, total = spine.cols, spine.total
+    mem_full = state.mem_full
+    if mem_full is not None and int(mem_full.ne) != 0:
+        # The sealed-tier handoff: the frozen full MemGraph rides the spine
+        # (rid = -1, always visible) until its flush commit retires it.
+        total = total + int(mem_full.ne)
+        mem_stream = mg_mod.backbone_stream(mem_full)
+        if spine.total == 0:
+            # Rotate-published state with no runs yet (or all quarantined):
+            # the mem stream IS the spine — merging against the zero-length
+            # run columns would dispatch an empty-operand gather.
+            cols = _fit_spine_cols(mem_stream, total)
+        else:
+            cols = kops.tournament_merge([mem_stream, tuple(cols)])
+            cols = _fit_spine_cols(cols, total)
+    src, d, t, rid, m, p = cols
+    return _ReadBackbone(src, d, t, rid, m, p, _np(d), _np(p),
+                         list(spine.runs))
+
+
 class LSMGraph:
-    """Dynamic graph store: LSM-tree level structure over CSR runs."""
+    """Dynamic graph store: LSM-tree level structure over CSR runs.
+
+    Lock roster (see the core package doc for the full protocol):
+
+    * ``_lock`` — the COMMIT lock: short, host-only read-modify-write of
+      ``self._state`` (plus WAL append / ts assignment).  Never held
+      across device work; never taken by readers.
+    * ``_write_lock`` — serializes MemGraph writers (apply chunks + the
+      flush rotate); device-side inserts happen under it, outside
+      ``_lock``.
+    * ``_flush_lock`` — serializes flush pipelines and level/index
+      mutation (compaction commits take it too).
+    * ``_compact_lock`` — serializes whole compactions.
+    * ``_fid_lock`` — fid allocation (flush and resegment race otherwise).
+
+    Order: ``_compact_lock`` > ``_flush_lock`` > ``_write_lock`` >
+    ``_lock`` (> ``versions._lock``); any prefix may be skipped, never
+    reordered."""
 
     def __init__(self, cfg: StoreConfig, durability=None):
         cfg.validate()
@@ -79,45 +339,106 @@ class LSMGraph:
         # segment-file / manifest hooks.  None = in-memory store (seed mode).
         self.durability = durability
         self._lock = threading.RLock()
+        self._write_lock = threading.RLock()   # serializes MemGraph writers
         self._flush_lock = threading.RLock()   # serializes flush pipelines
         self._compact_lock = threading.RLock()  # serializes compactions
-        self.mem: MemGraphState = mg_mod.empty_memgraph(cfg)
-        self.mem_id = 0
-        # Second MemGraph slot: "two MemGraphs alternate" (paper §5.1); the
-        # full one is readable while the background thread flushes it.
-        self.mem_full: Optional[MemGraphState] = None
-        self.mem_full_id: Optional[int] = None
-        self._next_mem_id = 1
-        self.levels: List[List[RunFile]] = [[] for _ in range(cfg.n_levels)]
-        self.index = mlindex.empty_index(cfg.vmax, cfg.n_levels)
-        self.runs_by_fid: Dict[int, RunFile] = {}
+        self._fid_lock = threading.Lock()
         self.versions = VersionChain()
         self.io = IOCounters()
         self.on_flush_needed = None  # callback for the concurrent wrapper
         self._ts = 0
         self._next_fid = 0
-        self._publish()
+        self._next_mem_id = 1
+        self._spine_cache = _SpineCache()
+        version = self.versions.publish((0,), (), 0)
+        self._state = StoreState(
+            epoch=0, tau=0, mem=mg_mod.empty_memgraph(cfg), mem_id=0,
+            mem_full=None, mem_full_id=None,
+            levels=tuple(() for _ in range(cfg.n_levels)),
+            index=mlindex.empty_index(cfg.vmax, cfg.n_levels),
+            runs_by_fid={}, version=version, degraded=(),
+            spine=_SpineHandle())
         if durability is not None:
             durability.attach(self)
 
     # ------------------------------------------------------------------ util
-    def _publish(self) -> Version:
-        mems = (self.mem_id,) + (
-            (self.mem_full_id,) if self.mem_full_id is not None else ())
-        l0 = tuple(r.fid for r in self.levels[0])
-        return self.versions.publish(mems, l0, self._ts)
+    @property
+    def state(self) -> StoreState:
+        """The current published state — one atomic reference read."""
+        return self._state
+
+    # Read-only views of the published state: legacy call sites (tests,
+    # benchmarks, the storage engine) keep reading `store.levels` etc.;
+    # all mutation goes through state publication.
+    @property
+    def mem(self) -> MemGraphState:
+        return self._state.mem
+
+    @property
+    def mem_id(self) -> int:
+        return self._state.mem_id
+
+    @property
+    def mem_full(self) -> Optional[MemGraphState]:
+        return self._state.mem_full
+
+    @property
+    def mem_full_id(self) -> Optional[int]:
+        return self._state.mem_full_id
+
+    @property
+    def levels(self) -> Tuple[Tuple[RunFile, ...], ...]:
+        return self._state.levels
+
+    @property
+    def index(self):
+        return self._state.index
+
+    @property
+    def runs_by_fid(self) -> Dict[int, RunFile]:
+        return self._state.runs_by_fid
+
+    def _swap_state(self, **fields) -> StoreState:
+        """Install the next StoreState (epoch + caller-precomputed fields).
+        Caller holds ``_lock``; every expensive value is computed before
+        entering it — this is a host-only read-modify-write."""
+        cur = self._state
+        nxt = dataclasses.replace(cur, epoch=cur.epoch + 1, **fields)
+        self._state = nxt
+        return nxt
+
+    def note_health_change(self) -> None:
+        """Republish after a quarantine or heal: the next state carries the
+        live degraded set and a FRESH spine handle, so spines built from
+        here on exclude (or re-include) the affected segments.  Called by
+        the storage engine off the serving path."""
+        deg = self.degraded_ranges()
+        with self._lock:
+            self._swap_state(degraded=deg, spine=_SpineHandle())
+
+    def drop_read_spine(self) -> None:
+        """Forget every cached merged read view: reset the splice cache and
+        publish a fresh (empty) spine handle.  The next snapshot read
+        rebuilds from run arrays, paying the lazy disk loads again.  Pairs
+        with the storage engine's segment eviction — without this, the
+        state-owned spine would keep serving merged copies of evicted
+        bytes and the chaos harness's cold-read lever would read warm."""
+        self._spine_cache = _SpineCache()
+        with self._lock:
+            self._swap_state(spine=_SpineHandle())
 
     def _new_fid(self) -> int:
-        f = self._next_fid
-        self._next_fid += 1
-        return f
+        with self._fid_lock:
+            f = self._next_fid
+            self._next_fid += 1
+            return f
 
     @property
     def tau(self) -> int:
-        return self._ts
+        return self._state.tau
 
     def n_edges_cached(self) -> int:
-        return int(self.mem.ne)
+        return int(self._state.mem.ne)
 
     # ----------------------------------------------------------------- write
     def insert_edges(self, src, dst, prop=None) -> Optional[int]:
@@ -160,15 +481,23 @@ class LSMGraph:
                     raise RuntimeError(
                         "background flush did not relieve a hard-full "
                         "MemGraph within 60 s")
-            with self._lock:
-                ts = np.arange(self._ts, self._ts + n, dtype=np.int32)
-                self._ts += n
-                marker = np.full(n, delete, bool)
-                if self.durability is not None:
-                    # WAL-before-MemGraph: the batch is logged before it can
-                    # become readable; fsync is group-committed off-path.
-                    commit_seq = self.durability.on_apply(s, d, ts, marker, p)
-                if not self._insert_batch_locked(s, d, ts, marker, p):
+            marker = np.full(n, delete, bool)
+            with self._write_lock:
+                st = self._state
+                with self._lock:
+                    ts = np.arange(self._ts, self._ts + n, dtype=np.int32)
+                    self._ts += n
+                    if self.durability is not None:
+                        # WAL-before-MemGraph: the batch is logged before it
+                        # can become readable; fsync group-commits off-path.
+                        commit_seq = self.durability.on_apply(
+                            s, d, ts, marker, p)
+                # Device-side insert OUTSIDE the commit lock: the functional
+                # MemGraph update builds the next tier off to the side
+                # (_write_lock keeps it single-writer) and only the
+                # reference swap below re-enters _lock.
+                new_mem, ok = self._insert_batch(st.mem, s, d, ts, marker, p)
+                if not ok:
                     if self.durability is not None:
                         # Keep WAL == acknowledged state: replay must not
                         # resurrect a batch whose insert raised.
@@ -179,15 +508,21 @@ class LSMGraph:
                     # Charge the compact-array growth movement the ablation
                     # emulates: spilled edges imply copying the vertex's edges.
                     self.io.flush_write += n  # nominal movement charge
+                with self._lock:
+                    # tau advances ONLY with a mem publish — every other
+                    # commit keeps the tau of the content it carries.
+                    self._swap_state(mem=new_mem, tau=self._ts)
             if allow_flush and mg_mod.memgraph_should_flush(
-                    self.mem, self.cfg):
+                    self._state.mem, self.cfg):
                 self.flush_memgraph()
         return commit_seq
 
-    def _insert_batch_locked(self, s, d, t, m, p) -> bool:
+    def _insert_batch(self, mem: MemGraphState, s, d, t, m, p):
         """Pad one <= batch_cap chunk into an EdgeBatch and insert it into
-        MemGraph.  Caller holds ``self._lock``.  Shared by the live write
-        path (store-assigned ts) and WAL replay (original ts)."""
+        the given MemGraph tier, returning ``(new_mem, ok)``.  Functional:
+        the caller publishes the returned tier.  Runs under ``_write_lock``
+        (single writer), never under the commit lock.  Shared by the live
+        write path (store-assigned ts) and WAL replay (original ts)."""
         bc = self.cfg.batch_cap
         batch = EdgeBatch(
             src=jnp.asarray(_pad(s, bc)),
@@ -197,9 +532,9 @@ class LSMGraph:
             marker=jnp.asarray(_pad(m, bc)),
             n=jnp.asarray(len(s), jnp.int32),
         )
-        self.mem, ok = mg_mod.insert_batch(
-            self.mem, batch, mode=self.cfg.memcache_mode)
-        return bool(ok)
+        new_mem, ok = mg_mod.insert_batch(
+            mem, batch, mode=self.cfg.memcache_mode)
+        return new_mem, bool(ok)
 
     def _ingest_replay(self, src, dst, ts, marker, prop) -> None:
         """Recovery-only ingest: re-insert WAL records with their ORIGINAL
@@ -215,19 +550,25 @@ class LSMGraph:
         for off in range(0, len(src), bc):
             s, d = src[off:off + bc], dst[off:off + bc]
             t, m, p = ts[off:off + bc], marker[off:off + bc], prop[off:off + bc]
-            with self._lock:
-                self._ts = max(self._ts, int(t[-1]) + 1)
-                if not self._insert_batch_locked(s, d, t, m, p):
+            with self._write_lock:
+                st = self._state
+                with self._lock:
+                    self._ts = max(self._ts, int(t[-1]) + 1)
+                new_mem, ok = self._insert_batch(st.mem, s, d, t, m, p)
+                if not ok:
                     raise RuntimeError(
                         "MemGraph overflow during WAL replay — raise mem caps")
-            if mg_mod.memgraph_should_flush(self.mem, self.cfg):
+                with self._lock:
+                    self._swap_state(mem=new_mem, tau=self._ts)
+            if mg_mod.memgraph_should_flush(self._state.mem, self.cfg):
                 self.flush_memgraph()
 
     def _mem_hard_full(self) -> bool:
+        mem = self._state.mem
         return (
-            int(self.mem.ovf_n) >= self.cfg.ovf_cap - self.cfg.batch_cap
-            or int(self.mem.n_rows) >= self.cfg.n_segments - self.cfg.batch_cap
-            or int(self.mem.n_rows) >= int(0.72 * self.cfg.hash_slots)
+            int(mem.ovf_n) >= self.cfg.ovf_cap - self.cfg.batch_cap
+            or int(mem.n_rows) >= self.cfg.n_segments - self.cfg.batch_cap
+            or int(mem.n_rows) >= int(0.72 * self.cfg.hash_slots)
         )
 
     # ----------------------------------------------------------------- flush
@@ -235,39 +576,66 @@ class LSMGraph:
         """MemGraph -> L0 CSR run, written directly without compaction
         (paper: 'directly written to L0'); then maybe L0 compaction.
 
-        The sort/build runs outside the store lock: the full MemGraph is
-        double-buffered and immutable while the fresh one takes writes
-        (paper §5.1: 'two MemGraphs alternate')."""
+        The sort/build runs outside every lock writers or readers contend
+        on: the full MemGraph is double-buffered and immutable while the
+        fresh one takes writes (paper §5.1: 'two MemGraphs alternate').
+        The rotate and the commit are each ONE published state swap; both
+        seal membership, so both install fresh spine handles."""
         with self._flush_lock:
-            with self._lock:
-                if int(self.mem.ne) == 0:
-                    return None
-                # Rotate double buffer: full MemGraph stays readable.
-                self.mem_full, self.mem_full_id = self.mem, self.mem_id
-                self.mem = mg_mod.empty_memgraph(self.cfg)
-                self.mem_id = self._next_mem_id
-                self._next_mem_id += 1
-                self._publish()
-                wal_floor = self._ts  # every record below this ts is in
-                # mem_full or already-flushed runs
+            if int(self._state.mem.ne) == 0:
+                return None
+            fresh = mg_mod.empty_memgraph(self.cfg)  # device work, pre-lock
+            deg = self.degraded_ranges()
+            with self._write_lock:
+                # _write_lock excludes in-flight appliers: self._ts is
+                # exactly the published tau and no WAL record interleaves
+                # between the rotate swap and on_flush_rotate below.
+                with self._lock:
+                    st = self._state
+                    if int(st.mem.ne) == 0:
+                        return None
+                    mem_id = self._next_mem_id
+                    self._next_mem_id += 1
+                    wal_floor = self._ts  # every record below this ts is in
+                    # mem_full or already-flushed runs
+                    version = self.versions.publish(
+                        (mem_id, st.mem_id),
+                        tuple(r.fid for r in st.levels[0]), self._ts)
+                    # Rotate double buffer: full MemGraph stays readable.
+                    self._swap_state(
+                        mem=fresh, mem_id=mem_id, mem_full=st.mem,
+                        mem_full_id=st.mem_id, version=version,
+                        degraded=deg, spine=_SpineHandle())
+                    mem_full = st.mem
                 if self.durability is not None:
                     self.durability.on_flush_rotate(wal_floor)
-            src, dst, ts, marker, prop, n = mg_mod.flush_arrays(self.mem_full)
+            src, dst, ts, marker, prop, n = mg_mod.flush_arrays(mem_full)
             cap = csr.quantize_cap(int(n))
             run = csr.build_run_arrays(src, dst, ts, marker, prop, n, vcap=cap)
             run = csr.repad_run(run, cap, cap)
+            rf = self._wrap(run, level=0)
+            # Index update off-lock: _flush_lock (held) is the only
+            # serializer of index mutation; apply publishes never touch it.
+            new_index = mlindex.note_l0_flush(
+                self._state.index, run.vkeys, run.nv,
+                jnp.asarray(rf.fid, jnp.int32))
+            self.io.flush_write += rf.nbytes
+            self.io.index_write += int(run.nv) * 8
+            new_runs = dict(self._state.runs_by_fid)
+            new_runs[rf.fid] = rf
+            deg = self.degraded_ranges()
             with self._lock:
-                rf = self._wrap(run, level=0)
-                self.levels[0].append(rf)
-                self.index = mlindex.note_l0_flush(
-                    self.index, run.vkeys, run.nv,
-                    jnp.asarray(rf.fid, jnp.int32))
-                self.io.flush_write += rf.nbytes
-                self.io.index_write += int(run.nv) * 8
-                # Flush done: retire the full MemGraph from the version view.
-                self.mem_full, self.mem_full_id = None, None
-                self._publish()
-                need_compact = len(self.levels[0]) >= self.cfg.l0_run_limit
+                st = self._state
+                new_levels = (st.levels[0] + (rf,),) + st.levels[1:]
+                version = self.versions.publish(
+                    (st.mem_id,),
+                    tuple(r.fid for r in new_levels[0]), st.tau)
+                # Flush done: retire the full MemGraph from the state.
+                self._swap_state(
+                    levels=new_levels, index=new_index, runs_by_fid=new_runs,
+                    mem_full=None, mem_full_id=None, version=version,
+                    degraded=deg, spine=_SpineHandle())
+                need_compact = len(new_levels[0]) >= self.cfg.l0_run_limit
             if self.durability is not None:
                 # Segment write + manifest flush-edit + WAL prune.  On crash
                 # before the manifest edit lands the WAL tail replays mem_full.
@@ -277,17 +645,18 @@ class LSMGraph:
         return rf
 
     def _wrap(self, run: csr.CSRRunArrays, level: int) -> RunFile:
+        """Materialize a RunFile (fid allocation under its own lock — flush
+        and resegment may race).  Registration in ``runs_by_fid`` happens at
+        COMMIT time, inside the membership swap that makes the run visible."""
         nv, ne = int(run.nv), int(run.ne)
         if nv > 0:
             vk = _np(run.vkeys[:nv])
             min_v, max_v = int(vk[0]), int(vk[-1])
         else:
             min_v, max_v = 0, -1
-        rf = RunFile(fid=self._new_fid(), level=level, arrays=run,
-                     min_vid=min_v, max_vid=max_v, created_ts=self._ts,
-                     nv=nv, ne=ne, io=self.io)
-        self.runs_by_fid[rf.fid] = rf
-        return rf
+        return RunFile(fid=self._new_fid(), level=level, arrays=run,
+                       min_vid=min_v, max_vid=max_v, created_ts=self._ts,
+                       nv=nv, ne=ne, io=self.io)
 
     # ------------------------------------------------------------ compaction
     def compact_l0(self) -> None:
@@ -299,34 +668,55 @@ class LSMGraph:
         snapshot freely during compaction (paper §4.3, Fig 18).
         """
         with self._compact_lock:
-            with self._lock:
-                l0 = [r for r in self.levels[0] if r.nv > 0]
-                l0_all = list(self.levels[0])
-                if not l0:
-                    self.levels[0] = []
-                    return
-                lo = min(r.min_vid for r in l0)
-                hi = max(r.max_vid for r in l0) + 1
-                overlap = [r for r in self.levels[1]
-                           if r.nv > 0 and r.min_vid < hi and r.max_vid >= lo]
+            # Source selection is a lock-free read of one published state:
+            # membership only changes under _flush_lock, which the commit
+            # below re-checks by removing selected fids (never "all of L0").
+            st = self._state
+            l0 = [r for r in st.levels[0] if r.nv > 0]
+            l0_all = list(st.levels[0])
+            if not l0:
+                if l0_all:
+                    self._drop_empty_l0(l0_all)
+                return
+            lo = min(r.min_vid for r in l0)
+            hi = max(r.max_vid for r in l0) + 1
+            overlap = [r for r in st.levels[1]
+                       if r.nv > 0 and r.min_vid < hi and r.max_vid >= lo]
             self._merge_into(sources=l0, overlap=overlap, target_level=1,
                              range_lo=lo, range_hi=hi,
                              l0_max_fid=max(r.fid for r in l0),
                              also_remove=l0_all)
             self._maybe_cascade(1)
 
+    def _drop_empty_l0(self, empties: List[RunFile]) -> None:
+        """Publish L0 minus zero-vertex runs (defensive; no record moves)."""
+        drop = {r.fid for r in empties}
+        with self._flush_lock:
+            new_runs = {f: r for f, r in self._state.runs_by_fid.items()
+                        if f not in drop}
+            with self._lock:
+                st = self._state
+                new_levels = (tuple(r for r in st.levels[0]
+                                    if r.fid not in drop),) + st.levels[1:]
+                version = self.versions.publish(
+                    (st.mem_id,) + ((st.mem_full_id,)
+                                    if st.mem_full_id is not None else ()),
+                    tuple(r.fid for r in new_levels[0]), st.tau)
+                self._swap_state(levels=new_levels, runs_by_fid=new_runs,
+                                 version=version, spine=_SpineHandle())
+
     def compact_partial(self, level: int) -> None:
         """Partial compaction: move ONE segment file of `level` down (paper
         §4.2.1) — only overlapping target segments participate."""
         with self._compact_lock:
-            with self._lock:
-                segs = self.levels[level]
-                if not segs:
-                    return
-                src_seg = max(segs, key=lambda r: r.ne)
-                lo, hi = src_seg.min_vid, src_seg.max_vid + 1
-                overlap = [r for r in self.levels[level + 1]
-                           if r.nv > 0 and r.min_vid < hi and r.max_vid >= lo]
+            st = self._state
+            segs = st.levels[level]
+            if not segs:
+                return
+            src_seg = max(segs, key=lambda r: r.ne)
+            lo, hi = src_seg.min_vid, src_seg.max_vid + 1
+            overlap = [r for r in st.levels[level + 1]
+                       if r.nv > 0 and r.min_vid < hi and r.max_vid >= lo]
             self._merge_into(sources=[src_seg], overlap=overlap,
                              target_level=level + 1, range_lo=lo, range_hi=hi,
                              l0_max_fid=None, also_remove=[src_seg])
@@ -352,23 +742,25 @@ class LSMGraph:
             # Write the merge outputs while no lock is held; they stay
             # invisible (orphans) until the manifest edit below lands.
             self.durability.on_compact_segments(new_segs)
-        # ---- commit phase: short critical section ----
+        # ---- commit phase: publish, not mutate-under-lock ----
         # _flush_lock orders this commit (and its manifest 'compact' edit +
         # old-file unlinks) against a concurrent flush pipeline: a compacted
         # L0 run's manifest 'flush' ADD must land before this edit REMOVES
         # it, or a crash could recover a manifest naming an unlinked file /
         # resurrecting merged records.  Lock order is _compact -> _flush ->
-        # _lock everywhere (flush_memgraph releases _flush_lock before it
-        # calls compact_l0), so this cannot deadlock.
+        # _write -> _lock everywhere (flush_memgraph releases _flush_lock
+        # before it calls compact_l0), so this cannot deadlock.  The new
+        # membership/index are computed under _flush_lock alone (it is the
+        # only serializer of level/index change); only the reference swap
+        # enters the commit lock.
         with self._flush_lock:
-            with self._lock:
-                self._commit_merge(sources=sources, overlap=overlap,
-                                   new_segs=new_segs,
-                                   merged_nv=int(merged.nv),
-                                   target_level=target_level,
-                                   range_lo=range_lo, range_hi=range_hi,
-                                   l0_max_fid=l0_max_fid,
-                                   also_remove=also_remove)
+            self._commit_merge(sources=sources, overlap=overlap,
+                               new_segs=new_segs,
+                               merged_nv=int(merged.nv),
+                               target_level=target_level,
+                               range_lo=range_lo, range_hi=range_hi,
+                               l0_max_fid=l0_max_fid,
+                               also_remove=also_remove)
             if self.durability is not None:
                 # One fsync'd manifest record makes the swap crash-atomic;
                 # the replaced files are deleted only after it lands.
@@ -380,24 +772,32 @@ class LSMGraph:
     def _commit_merge(self, *, sources, overlap, new_segs, merged_nv,
                       target_level, range_lo, range_hi, l0_max_fid,
                       also_remove) -> None:
+        """Build the post-compaction membership + index functionally (caller
+        holds ``_flush_lock`` — level/index fields cannot change under us;
+        concurrent apply publishes only touch mem/tau), then install it with
+        one commit-lock swap."""
+        st = self._state
         # Remove compacted source files from their level (runs flushed to L0
         # during an in-flight compaction survive untouched).
         src_level = target_level - 1
         removed_fids = {r.fid for r in also_remove}
-        self.levels[src_level] = [
-            r for r in self.levels[src_level] if r.fid not in removed_fids]
+        new_levels = list(st.levels)
+        new_levels[src_level] = tuple(
+            r for r in st.levels[src_level] if r.fid not in removed_fids)
         # Replace overlapping target segments; keep disjoint ones untouched.
         overlap_fids = {r.fid for r in overlap}
-        keep = [r for r in self.levels[target_level]
+        keep = [r for r in st.levels[target_level]
                 if r.fid not in overlap_fids]
-        self.levels[target_level] = sorted(
-            keep + new_segs, key=lambda r: r.min_vid)
+        new_levels[target_level] = tuple(sorted(
+            keep + new_segs, key=lambda r: r.min_vid))
+        new_levels = tuple(new_levels)
         # Index + vertex-grained version-control updates (paper §4.3): the new
         # (fid, offset) per vertex, the cleared source level, and — for L0
         # compactions — the min readable L0 fid = max involved fid + 1.
+        index = st.index
         for seg in new_segs:
-            self.index = mlindex.note_compaction(
-                self.index, level=target_level,
+            index = mlindex.note_compaction(
+                index, level=target_level,
                 new_vkeys=seg.arrays.vkeys, new_voff=seg.arrays.voff,
                 new_nv=seg.arrays.nv, new_fid=jnp.asarray(seg.fid, jnp.int32),
                 range_lo=jnp.asarray(seg.min_vid, jnp.int32),
@@ -408,8 +808,8 @@ class LSMGraph:
             )
         if not new_segs:
             # Everything annihilated: still clear the range + L0 visibility.
-            self.index = mlindex.note_compaction(
-                self.index, level=target_level,
+            index = mlindex.note_compaction(
+                index, level=target_level,
                 new_vkeys=jnp.full((1,), INVALID_VID, jnp.int32),
                 new_voff=jnp.zeros((2,), jnp.int32),
                 new_nv=jnp.asarray(0, jnp.int32),
@@ -427,8 +827,8 @@ class LSMGraph:
             covered = [(s.min_vid, s.max_vid + 1) for s in new_segs]
             gaps = _range_gaps(range_lo, range_hi, covered)
             for (glo, ghi) in gaps:
-                self.index = mlindex.note_compaction(
-                    self.index, level=target_level,
+                index = mlindex.note_compaction(
+                    index, level=target_level,
                     new_vkeys=jnp.full((1,), INVALID_VID, jnp.int32),
                     new_voff=jnp.zeros((2,), jnp.int32),
                     new_nv=jnp.asarray(0, jnp.int32),
@@ -440,9 +840,21 @@ class LSMGraph:
                         jnp.int32),
                 )
         self.io.index_write += merged_nv * 8
+        new_runs = dict(st.runs_by_fid)
         for r in sources + overlap:
-            self.runs_by_fid.pop(r.fid, None)
-        self._publish()
+            new_runs.pop(r.fid, None)
+        for seg in new_segs:
+            new_runs[seg.fid] = seg
+        deg = self.degraded_ranges()
+        with self._lock:
+            cur = self._state  # re-read: mem/tau may have advanced
+            version = self.versions.publish(
+                (cur.mem_id,) + ((cur.mem_full_id,)
+                                 if cur.mem_full_id is not None else ()),
+                tuple(r.fid for r in new_levels[0]), cur.tau)
+            self._swap_state(levels=new_levels, index=index,
+                             runs_by_fid=new_runs, version=version,
+                             degraded=deg, spine=_SpineHandle())
 
     def _resegment(self, merged: csr.CSRRunArrays, level: int) -> List[RunFile]:
         """Split a merged run into segment files at vertex boundaries,
@@ -478,16 +890,20 @@ class LSMGraph:
     def _maybe_cascade(self, level: int) -> None:
         if level >= self.cfg.n_levels - 1:
             return
-        with self._lock:
-            size = sum(r.ne for r in self.levels[level])
+        size = sum(r.ne for r in self._state.levels[level])
         if size > self.cfg.level_capacity(level):
             self.compact_partial(level)
 
     # ------------------------------------------------------------------ read
     def snapshot(self) -> "Snapshot":
-        with self._lock:
-            version = self.versions.pin_current(self._ts)
-            return Snapshot(self, version, tau=self._ts)
+        """Pin a consistent view — LOCK-FREE: one atomic read of the
+        published state; the version-chain pin touches only the chain's own
+        constant-time refcount mutex (never held across device work or a
+        writer commit).  No store lock is acquired anywhere on this path —
+        the lock-discipline lint (tools/lint_locks.py) enforces it."""
+        st = self._state
+        self.versions.pin(st.version, st.tau)
+        return Snapshot(self, st)
 
     def query_edge(self, u: int, v: int) -> bool:
         snap = self.snapshot()
@@ -517,6 +933,31 @@ class LSMGraph:
         barrier.  No-op for in-memory stores or a ``None`` seq."""
         if commit_seq is not None and self.durability is not None:
             self.durability.sync_upto(commit_seq)
+
+    def _install_recovered(self, levels, index, tau: int,
+                           next_fid: int) -> None:
+        """Publish the initial state reconstructed by ``storage.recovery``:
+        one swap installs the recovered run membership, rebuilt index, and
+        replayed tau — after this, the store serves reads with no trace of
+        the recovery-time mutation (recovery builds its level lists
+        locally, never poking published state)."""
+        levels_t = tuple(tuple(lvl) for lvl in levels)
+        runs = {r.fid: r for lvl in levels_t for r in lvl}
+        deg = self.degraded_ranges()
+        with self._flush_lock, self._write_lock:
+            with self._fid_lock:
+                self._next_fid = max(self._next_fid, next_fid)
+            with self._lock:
+                self._ts = max(self._ts, tau)
+                st = self._state
+                version = self.versions.publish(
+                    (st.mem_id,) + ((st.mem_full_id,)
+                                    if st.mem_full_id is not None else ()),
+                    tuple(r.fid for r in levels_t[0]), self._ts)
+                self._swap_state(levels=levels_t, index=index,
+                                 runs_by_fid=runs, tau=self._ts,
+                                 version=version, degraded=deg,
+                                 spine=_SpineHandle())
 
     def degraded_ranges(self) -> tuple:
         """Vertex ranges whose on-disk data is quarantined/unreadable
@@ -608,38 +1049,36 @@ class _ReadBackbone:
 
 
 class Snapshot:
-    """A pinned consistent view (version + index arrays + run refs + τ).
+    """A pinned consistent view — one published ``StoreState``.
 
-    Immutability makes the pin trivially consistent: compactions create new
-    arrays, never mutate pinned ones (DESIGN.md §4).
+    Immutability makes the pin trivially consistent: the state was frozen
+    at publication and commits create new arrays, never mutate pinned ones
+    (DESIGN.md §4).  Construction is LOCK-FREE: every field is a read of
+    the already-consistent state object.
     """
 
-    def __init__(self, store: LSMGraph, version: Version, tau: int):
+    def __init__(self, store: LSMGraph, state: StoreState):
         self._store = store
-        self.version = version
-        self.tau = tau  # acquired at snapshot() time, NOT the publish τ
+        self.state = state
+        self.version = state.version
+        self.tau = state.tau
         self.cfg = store.cfg
-        # Pin array references NOW — later store mutations are invisible.
-        self.index = store.index
-        self.mem_states: List[MemGraphState] = []
-        # Degraded ranges pinned at snapshot time: runs whose file was
-        # quarantined are excluded from the pin (their arrays are gone and
+        self.index = state.index
+        self.mem_states: List[MemGraphState] = [state.mem]
+        if state.mem_full is not None:
+            self.mem_states.append(state.mem_full)
+        # Degraded ranges read LIVE at snapshot time (the engine's own
+        # health mutex, not a store lock): runs whose file was quarantined
+        # are excluded from the pin (their arrays are gone and
         # unreloadable); queries overlapping their vertex ranges raise a
         # typed error instead of silently missing edges.
         self.degraded = store.degraded_ranges()
         bad_fids = {r.fid for r in self.degraded}
-        with store._lock:
-            if store.mem_id in version.memgraph_ids:
-                self.mem_states.append(store.mem)
-            if (store.mem_full_id is not None
-                    and store.mem_full_id in version.memgraph_ids):
-                self.mem_states.append(store.mem_full)
-            self.l0_runs: List[RunFile] = [
-                store.runs_by_fid[f] for f in version.l0_fids
-                if f in store.runs_by_fid and f not in bad_fids]
-            self.level_runs: List[List[RunFile]] = [
-                [r for r in lvl if r.fid not in bad_fids]
-                for lvl in store.levels[1:]]
+        self.l0_runs: List[RunFile] = [
+            r for r in state.levels[0] if r.fid not in bad_fids]
+        self.level_runs: List[List[RunFile]] = [
+            [r for r in lvl if r.fid not in bad_fids]
+            for lvl in state.levels[1:]]
         # Evicted (durable, cold) segments stay cold at pin time: every read
         # path materializes lazily via ensure_loaded, and a run's file can't
         # vanish under a pin — compaction re-materializes the runs it removes
@@ -648,8 +1087,6 @@ class Snapshot:
         self.runs_by_fid = {r.fid: r
                             for lvl in ([self.l0_runs] + self.level_runs)
                             for r in lvl}
-        self._backbone: Optional[_ReadBackbone] = None
-        self._backbone_lock = threading.Lock()
         self._released = False
 
     def release(self) -> None:
@@ -777,7 +1214,7 @@ class Snapshot:
         offs_l, dst_l, prop_l = [np.zeros(1, np.int64)], [], []
         base = 0
         for i, cu in enumerate(chunks):
-            if i + 1 < len(chunks) and self._backbone is None:
+            if i + 1 < len(chunks) and not self.spine_ready():
                 # Double-buffer (legacy / pre-spine): chunk i+1's cold
                 # segments stream in while chunk i dispatches and
                 # annihilates.  Once the backbone exists, chunks never
@@ -792,73 +1229,36 @@ class Snapshot:
         return (np.concatenate(offs_l), np.concatenate(dst_l),
                 np.concatenate(prop_l))
 
-    def _build_backbone(self) -> _ReadBackbone:
-        """Merge every pinned source into the snapshot's read spine.
-
-        Pipelined: cold segments start loading on the background pool
-        before any device work (their ensure_loaded joins the in-flight
-        load as the merge reaches them); each CSR run enters the tournament
-        in its NATIVE (src, dst, ts) order — no per-run sort — and only
-        MemGraph tiers (arrival-ordered) pay an individual device lexsort.
-        The log-k pairwise tournament then produces one globally sorted
-        record stream, padded to a quantized capacity (src == INVALID_VID
-        pads sort to the tail) so resolve shapes stay jit-cache friendly."""
-        mems = [mg for mg in self.mem_states if int(mg.ne) != 0]
-        # An empty MemGraph tier is skipped outright: it would contribute
-        # only capacity-shaped pad records to the spine.
-        runs: List[Tuple[RunFile, int]] = []
-        for rf in self.l0_runs:
-            if rf.nv > 0:
-                runs.append((rf, -1))
-        for col, lvl in enumerate(self.level_runs):
-            for rf in lvl:
-                if rf.nv > 0:
-                    runs.append((rf, col))
-        pool = None
-        for rf, _col in runs:
-            if rf.arrays is None:
-                pool = pool or prefetch_pool()
-                rf.prefetch(pool)
-        streams = [_mem_backbone_stream(mg) for mg in mems]
-        for i, (rf, _col) in enumerate(runs):
-            streams.append(_run_backbone_stream(
-                rf.ensure_loaded(), jnp.asarray(i, jnp.int32)))
-        if not streams:
-            z = jnp.zeros((0,), jnp.int32)
-            return _ReadBackbone(z, z, z, z, jnp.zeros((0,), bool),
-                                 jnp.zeros((0,), jnp.float32),
-                                 np.zeros(0, np.int32),
-                                 np.zeros(0, np.float32), runs)
-        src, d, t, rid, m, p = kops.tournament_merge(streams)
-        total = int(src.shape[0])
-        cap = csr.quantize_cap(total, half_steps=True)
-        if cap != total:
-            src, d, t, rid, m, p = _pad_backbone(src, d, t, rid, m, p,
-                                                 pad=cap - total)
-        return _ReadBackbone(src, d, t, rid, m, p, _np(d), _np(p), runs)
+    def spine_ready(self) -> bool:
+        """True once the shared per-state read spine exists (ANY snapshot
+        at this sealed epoch may already have built it)."""
+        return self.state.spine.ready()
 
     def _get_backbone(self) -> _ReadBackbone:
-        if self._backbone is None:
-            with self._backbone_lock:
-                if self._backbone is None:
-                    self._backbone = self._build_backbone()
-        return self._backbone
+        """The state's shared read backbone (built on first use by whichever
+        snapshot at this epoch gets here first — see ``_SpineHandle``)."""
+        return self.state.spine.get(self.state, self._store)
 
     def _resolve_batch(self, u: np.ndarray, pad_to: Optional[int] = None):
         """Resolve a SORTED UNIQUE query vector: (offsets[B+1], dst, prop),
         with dst ascending within each query's slice (scalar-path order).
 
-        Rides the snapshot's tournament-merged read spine (built once,
-        amortized over every resolve): one vectorized rank of the query
-        vector into the spine + the per-query index-visibility gather +
-        one segmented annihilation (newest visible wins per (src, dst),
-        tombstone hides).  ``LSMG_READ_TOURNAMENT_K=0`` falls back to the
-        legacy per-resolve concat-then-lexsort."""
+        Rides the state's SHARED sealed-tier read spine (built once per
+        sealed epoch, amortized over every resolve of every snapshot at
+        that epoch): one vectorized rank of the query vector into the
+        spine + the per-query index-visibility gather + one segmented
+        annihilation (newest visible wins per (src, dst), tombstone
+        hides).  The ACTIVE MemGraph is resolved separately per batch and
+        its visible (src, dst) pairs suppress the sealed winners — sound
+        because every active record is strictly newer than every sealed
+        one (ts tier dominance), so the combined result is byte-identical
+        to annihilating one merged stream.  ``LSMG_READ_TOURNAMENT_K=0``
+        falls back to the legacy per-resolve concat-then-lexsort."""
         B = len(u)
         bp = pad_to if pad_to is not None else csr.quantize_cap(B, minimum=64)
         assert bp >= B, "pad_to below query count"
         lo_q, hi_q = (int(u[0]), int(u[-1])) if B else (0, -1)
-        if self._backbone is None:
+        if not self.spine_ready():
             # Pre-spine only: once the backbone holds the merged records,
             # evicted segment arrays are never read again on this snapshot
             # — reloading them would be pure wasted I/O.
@@ -869,33 +1269,55 @@ class Snapshot:
         if _READ_TOURNAMENT_MAX_K <= 0:
             return self._resolve_batch_legacy(u, u_j, bp, lo_q, hi_q)
         bb = self._get_backbone()
-        if bb.src.shape[0] == 0:
+        mem = self.state.mem
+        have_mem = int(mem.ne) != 0
+        if bb.src.shape[0] == 0 and not have_mem:
             return (np.zeros(B + 1, np.int64), np.empty(0, np.int64),
                     np.empty(0, np.float32))
-        # Vectorized multi-level-index lookup -> per-(run, query) visibility.
-        first_g, min_g, lvl_fid_g, _ = mlindex.lookup_batch(self.index, u_j)
-        first_np, min_np = _np(first_g), _np(min_g)
-        lvl_np = _np(lvl_fid_g)
-        vis_rows = []
-        for rf, col in bb.runs:
-            if not self.cfg.use_multilevel_index:
-                # Ablation: no index — every segment file is probed
-                # (Fig 16 baseline); rank filtering still applies.
-                vis_rows.append(np.ones(bp, bool))
-            elif col < 0:
-                vis_rows.append(
-                    (rf.fid >= min_np)
-                    & ((first_np == INVALID_VID) | (rf.fid >= first_np)))
-            else:
-                vis_rows.append(lvl_np[:, col] == rf.fid)
-        vis_mat = (np.stack(vis_rows) if vis_rows
-                   else np.zeros((1, bp), bool))
-        qid, live, n_run = _backbone_resolve(
-            bb.src, bb.dst, bb.ts, bb.rid, bb.marker, u_j,
-            jnp.asarray(vis_mat), jnp.asarray(self.tau, jnp.int32),
-            jnp.asarray(B, jnp.int32))
-        return self._finish_resolve(qid, bb.dst_np, bb.prop_np,
-                                    live, int(n_run), B)
+        tau_j = jnp.asarray(self.tau, jnp.int32)
+        nq_j = jnp.asarray(B, jnp.int32)
+        qid = live = None
+        n_run = 0
+        if bb.src.shape[0]:
+            # Vectorized index lookup -> per-(run, query) visibility.
+            first_g, min_g, lvl_fid_g, _ = mlindex.lookup_batch(
+                self.index, u_j)
+            first_np, min_np = _np(first_g), _np(min_g)
+            lvl_np = _np(lvl_fid_g)
+            vis_rows = []
+            for rf, col in bb.runs:
+                if not self.cfg.use_multilevel_index:
+                    # Ablation: no index — every segment file is probed
+                    # (Fig 16 baseline); rank filtering still applies.
+                    vis_rows.append(np.ones(bp, bool))
+                elif col < 0:
+                    vis_rows.append(
+                        (rf.fid >= min_np)
+                        & ((first_np == INVALID_VID) | (rf.fid >= first_np)))
+                else:
+                    vis_rows.append(lvl_np[:, col] == rf.fid)
+            vis_mat = (np.stack(vis_rows) if vis_rows
+                       else np.zeros((1, bp), bool))
+            qid, live, n_run = _backbone_resolve(
+                bb.src, bb.dst, bb.ts, bb.rid, bb.marker, u_j,
+                jnp.asarray(vis_mat), tau_j, nq_j)
+        if not have_mem:
+            return self._finish_resolve(qid, bb.dst_np, bb.prop_np,
+                                        live, int(n_run), B)
+        mqid, mdst, mts, mmk, mpr = mg_mod.scan_vertices_batch(mem, u_j)
+        mq, md, mp, mlive, pq, pd, n_present = _mem_resolve(
+            mqid, mdst, mts, mmk, mpr, tau_j, nq_j)
+        parts = []
+        if qid is not None:
+            live = _suppress_sealed(qid, bb.dst, live, pq, pd, n_present)
+            sealed = _np(live)
+            parts.append((_np(qid)[sealed],
+                          bb.dst_np[sealed].astype(np.int64),
+                          bb.prop_np[sealed].astype(np.float32)))
+        ml = _np(mlive)
+        parts.append((_np(mq)[ml], _np(md)[ml].astype(np.int64),
+                      _np(mp)[ml].astype(np.float32)))
+        return self._finish_resolve_parts(parts, int(n_run), B)
 
     def _resolve_batch_legacy(self, u, u_j, bp, lo_q, hi_q):
         """Per-resolve concat + one segmented lexsort (the pre-backbone
@@ -946,6 +1368,23 @@ class Snapshot:
         ql = _np(qid)[live]
         dl = dst_np[live].astype(np.int64)
         pl = prop_np[live].astype(np.float32)
+        offs = np.searchsorted(ql, np.arange(B + 1))
+        return offs, dl, pl
+
+    def _finish_resolve_parts(self, parts, n_run: int, B: int):
+        """Combine the sealed-spine and active-tier live records into the
+        final (offsets, dst, prop).  The (qid, dst) pairs are disjoint
+        across parts (suppression removed every sealed winner of a
+        mem-present pair) and unique within each, so the lexsort is a
+        deterministic two-way merge — byte-identical to annihilating one
+        merged stream."""
+        self._store.io.analytics_read += n_run * (
+            BYTES_PER_EDGE + BYTES_PER_PROP)
+        ql = np.concatenate([p[0] for p in parts])
+        dl = np.concatenate([p[1] for p in parts]).astype(np.int64)
+        pl = np.concatenate([p[2] for p in parts]).astype(np.float32)
+        order = np.lexsort((dl, ql))
+        ql, dl, pl = ql[order], dl[order], pl[order]
         offs = np.searchsorted(ql, np.arange(B + 1))
         return offs, dl, pl
 
@@ -1121,15 +1560,44 @@ def _run_backbone_stream(run: csr.CSRRunArrays, rid: jnp.ndarray):
 
 
 @jax.jit
-def _mem_backbone_stream(mg: MemGraphState):
-    """One MemGraph tier as a backbone stream (rid = -1: always visible).
-    Arrival-ordered, so this stream (alone) pays a per-tier device lexsort;
-    invalid slots already carry src == INVALID_VID and sort to the tail."""
-    src, dst, ts, marker, prop, _n = mg_mod.flush_arrays(mg)
-    order = jnp.lexsort((ts, dst, src))
-    rid = jnp.full(src.shape, -1, jnp.int32)
-    return (src[order], dst[order], ts[order], rid,
-            marker[order], prop[order])
+def _mem_resolve(qid, dst, ts, marker, prop, tau, nq):
+    """Annihilate the ACTIVE MemGraph tier's records per (query, dst): one
+    lexsort by (qid, dst, ts); the newest τ-visible record of each pair
+    wins (a tombstone winner hides the pair).  Also emits the sorted
+    (qid, dst) pair set holding ANY visible record — the suppression probe:
+    by the ts tier-dominance invariant, every such pair's OVERALL winner
+    lives in this tier, so the sealed spine's winner for it is discarded
+    (`_suppress_sealed`).  Pair slots beyond ``n_present`` carry all-MAX
+    keys (sortedness preserved)."""
+    dead = jnp.iinfo(jnp.int32).max
+    qkey = jnp.where((qid < nq) & (ts <= tau), qid, dead)
+    order = jnp.lexsort((ts, dst, qkey))
+    q, d = qkey[order], dst[order]
+    m, p = marker[order], prop[order]
+    last = (q != jnp.roll(q, -1)) | (d != jnp.roll(d, -1))
+    last = last.at[-1].set(True)
+    present = last & (q < nq)
+    live = present & ~m
+    n = q.shape[0]
+    idx = jnp.nonzero(present, size=n, fill_value=n)[0]
+    idx_c = jnp.minimum(idx, n - 1)
+    pq = jnp.where(idx < n, q[idx_c], dead)
+    pd = jnp.where(idx < n, d[idx_c], dead)
+    n_present = jnp.sum(present, dtype=jnp.int32)
+    return q, d, p, live, pq, pd, n_present
+
+
+@jax.jit
+def _suppress_sealed(qid_s, dst_s, live_s, pq, pd, n_present):
+    """Drop sealed-spine winners whose (query, dst) pair the active tier
+    also holds: one lexicographic binary search of every sealed record
+    into the mem-present pair set."""
+    z = jnp.zeros_like(qid_s)
+    pos = kops.lex_searchsorted((pq, pd, jnp.zeros_like(pq)),
+                                qid_s, dst_s, z, n_present, side="left")
+    pos_c = jnp.minimum(pos, pq.shape[0] - 1)
+    hit = (pos < n_present) & (pq[pos_c] == qid_s) & (pd[pos_c] == dst_s)
+    return live_s & ~hit
 
 
 @functools.partial(jax.jit, static_argnames=("pad",))

@@ -43,14 +43,23 @@ class VersionChain:
                 self._gc_locked(old)
             return v
 
-    def pin_current(self, reader_tau: int) -> Version:
-        """Pin the current version for a reader that acquired τ=reader_tau
-        (the paper's 'acquire the latest snapshot number before reading')."""
+    def pin(self, version: Version, reader_tau: int) -> Version:
+        """Pin a version a reader obtained from a published ``StoreState``
+        (the paper's 'acquire the latest snapshot number before reading').
+
+        Lock-free callers read ``store._state`` *without* holding this lock,
+        so by the time they pin, ``publish`` may already have GC'd the
+        version (it had no pins and a newer current).  Re-inserting it here
+        (resurrection) is safe: the caller holds a strong reference to the
+        frozen ``StoreState``, so every run/memgraph the version names is
+        still reachable; the refcount entry merely re-registers it with the
+        GC so ``min_live_tau`` and ``live_versions`` account for the reader.
+        """
         with self._lock:
-            assert self._current is not None
-            self._refcount[self._current] += 1
+            self._versions.setdefault(version.vid, version)
+            self._refcount[version.vid] = self._refcount.get(version.vid, 0) + 1
             self._reader_taus.append(reader_tau)
-            return self._versions[self._current]
+            return version
 
     def unpin(self, vid: int, reader_tau: int) -> None:
         with self._lock:

@@ -28,7 +28,8 @@ interpret mode.
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+import threading
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,58 @@ from jax.experimental import pallas as pl
 
 BT = 256  # output tile size
 _I32MAX = jnp.iinfo(jnp.int32).max
+
+
+class MergeStats:
+    """Thread-safe merge-path counters (bumped from reader threads, the
+    compactor, and the spine splicer concurrently — a bare dict loses
+    increments under the race).  Mapping-compatible reads (`stats["k"]`,
+    `dict(stats)`) keep existing callers/tests working; writers must go
+    through ``bump``."""
+
+    _KEYS = ("kernel_merge", "host_lexsort", "spine_build", "spine_splice")
+
+    def __init__(self) -> None:
+        self._mu = threading.Lock()
+        self._counts: Dict[str, int] = {k: 0 for k in self._KEYS}
+
+    def bump(self, key: str, n: int = 1) -> None:
+        with self._mu:
+            self._counts[key] = self._counts.get(key, 0) + n
+
+    def snapshot_stats(self) -> Dict[str, int]:
+        """Point-in-time copy of every counter (the test-facing accessor)."""
+        with self._mu:
+            return dict(self._counts)
+
+    def reset(self) -> None:
+        with self._mu:
+            for k in list(self._counts):
+                self._counts[k] = 0
+
+    # Mapping-compatible read surface: dict(stats) and stats["key"] work.
+    def __getitem__(self, key: str) -> int:
+        with self._mu:
+            return self._counts[key]
+
+    def keys(self):
+        with self._mu:
+            return list(self._counts.keys())
+
+    def __iter__(self):
+        return iter(self.keys())
+
+    def __len__(self) -> int:
+        with self._mu:
+            return len(self._counts)
+
+
+MERGE_STATS = MergeStats()
+
+
+def snapshot_stats() -> Dict[str, int]:
+    """Module-level accessor for the shared merge counters."""
+    return MERGE_STATS.snapshot_stats()
 
 
 def _lex_less(a1, a2, a3, b1, b2, b3, *, strict: bool):

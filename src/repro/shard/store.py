@@ -253,7 +253,7 @@ class ShardedSnapshot:
         # router order.  Shards whose read spine is already built never
         # touch segment arrays again — skip those.
         for (s, idx) in slices:
-            if self.snaps[s]._backbone is None:
+            if not self.snaps[s].spine_ready():
                 self.snaps[s]._prefetch_range(int(uniq[idx[0]]),
                                               int(uniq[idx[-1]]))
         settled = _run_calls_settled(
@@ -500,15 +500,24 @@ class ShardedGraphStore:
     def fence(self, s: int, err) -> None:
         """Mark shard ``s`` failed: writes touching it are rejected
         (``ShardUnavailable``) and new snapshots skip it (its range reads
-        as degraded).  Idempotent; the FIRST error is the recorded cause."""
+        as degraded).  Idempotent; the FIRST error is the recorded cause.
+
+        The fenced map follows the store's publish discipline: mutators
+        build a NEW dict under ``_health_lock`` and swap the reference, so
+        ``fenced()`` reads the current map with one atomic attribute load —
+        reader threads checking shard health mid-fan-out never contend with
+        a fence landing from a pool worker."""
         with self._health_lock:
-            self._fenced.setdefault(
-                int(s), f"{type(err).__name__}: {err}")
+            if int(s) not in self._fenced:
+                nxt = dict(self._fenced)
+                nxt[int(s)] = f"{type(err).__name__}: {err}"
+                self._fenced = nxt
 
     def fenced(self) -> Dict[int, str]:
-        """Snapshot of the fenced-shard map (shard -> reason)."""
-        with self._health_lock:
-            return dict(self._fenced)
+        """Snapshot of the fenced-shard map (shard -> reason); lock-free —
+        ``fence``/``reopen_shard`` publish a fresh dict instead of mutating
+        the one a reader may be iterating."""
+        return dict(self._fenced)
 
     def health_report(self) -> Dict[int, dict]:
         """Per-shard health: ``ok``, ``degraded`` (serving around
@@ -555,7 +564,10 @@ class ShardedGraphStore:
             self.shards[s] = open_store(self.shard_roots[s],
                                         **self._open_opts)
             with self._health_lock:
-                self._fenced.pop(s, None)
+                if s in self._fenced:
+                    nxt = dict(self._fenced)
+                    nxt.pop(s, None)
+                    self._fenced = nxt
             self._epoch += 1
 
     # ------------------------------------------------------------------ reads

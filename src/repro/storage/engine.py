@@ -176,6 +176,11 @@ class DurableStorage:
             # Advisory: with no quarantine record, a reopen re-detects the
             # moved/missing file and converges to the same degraded state.
             pass
+        if self.store is not None:
+            # Publish a fresh StoreState so snapshots taken from now on see
+            # the degraded range (already-pinned snapshots keep serving
+            # their frozen state and hit the typed error on lazy reload).
+            self.store.note_health_change()
         return rng
 
     def mark_rebuilt(self, desc: dict) -> None:
@@ -183,6 +188,8 @@ class DurableStorage:
         self.manifest.append({"op": "rebuild", "add": [desc]})
         with self._deg_lock:
             self.degraded.pop(int(desc["fid"]), None)
+        if self.store is not None:
+            self.store.note_health_change()
 
     def degraded_ranges(self) -> Tuple[DegradedRange, ...]:
         with self._deg_lock:
@@ -294,24 +301,26 @@ class DurableStorage:
 
     def evict_cold_segments(self) -> int:
         """Drop in-RAM arrays of every L1+ segment (reloadable from disk via
-        the lazy loader).  Returns the number of runs evicted."""
-        store = self.store
+        the lazy loader).  Returns the number of runs evicted.  Reads one
+        published StoreState — run membership is immutable per state, so no
+        store lock is needed (eviction itself is per-RunFile atomic)."""
         n = 0
-        with store._lock:
-            for lvl in store.levels[1:]:
-                for rf in lvl:
-                    n += bool(rf.evict())
+        for lvl in self.store._state.levels[1:]:
+            for rf in lvl:
+                n += bool(rf.evict())
+        if n:
+            self.store.drop_read_spine()
         return n
 
     def evict_all_segments(self) -> int:
         """Drop in-RAM arrays of EVERY level's segments (L0 included) so the
         next read must hit disk — the chaos harness's cold-read lever."""
-        store = self.store
         n = 0
-        with store._lock:
-            for lvl in store.levels:
-                for rf in lvl:
-                    n += bool(rf.evict())
+        for lvl in self.store._state.levels:
+            for rf in lvl:
+                n += bool(rf.evict())
+        if n:
+            self.store.drop_read_spine()
         return n
 
     # ------------------------------------------------------------- scrubbing
@@ -325,11 +334,12 @@ class DurableStorage:
                  "degraded": 0, "transient": 0}
         if store is None:
             return stats
-        with store._lock:
-            with self._deg_lock:
-                bad = set(self.degraded)
-            rfs = [rf for lvl in store.levels for rf in lvl
-                   if rf.path is not None and rf.fid not in bad]
+        with self._deg_lock:
+            bad = set(self.degraded)
+        # One published StoreState is a consistent run-membership snapshot;
+        # the scrubber never needs the store's writer locks.
+        rfs = [rf for lvl in store._state.levels for rf in lvl
+               if rf.path is not None and rf.fid not in bad]
         for rf in rfs:
             try:
                 seg_mod.verify_segment(rf.path)

@@ -97,7 +97,9 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
                     int(desc["min_vid"]), int(desc["max_vid"]), int(fid),
                     qrec.get("reason", "quarantined"))
 
-    # -- load live segments; GC orphans (crashed publish attempts).
+    # -- load live segments; GC orphans (crashed publish attempts).  The
+    #    level lists are built LOCALLY and installed as one published
+    #    StoreState below — recovery never mutates serving state in place.
     live_files = {desc["file"] for desc in st.segments.values()}
     for name in os.listdir(seg_dir):
         if name not in live_files:
@@ -105,6 +107,7 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
                 os.unlink(os.path.join(seg_dir, name))
             except OSError:
                 pass
+    levels = [[] for _ in range(cfg.n_levels)]
     for fid in sorted(st.segments):
         desc = st.segments[fid]
         path = os.path.join(seg_dir, desc["file"])
@@ -128,20 +131,19 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
             created_ts=desc["created_ts"], nv=desc["nv"], ne=desc["ne"],
             path=path, loader=storage.make_loader(path, desc), io=store.io)
         storage.seg_descs[fid] = desc
-        store.levels[rf.level].append(rf)
-        store.runs_by_fid[fid] = rf
+        levels[rf.level].append(rf)
     for lvl in range(cfg.n_levels):
-        store.levels[lvl].sort(
+        levels[lvl].sort(
             key=(lambda r: r.fid) if lvl == 0 else (lambda r: r.min_vid))
 
     # -- rebuild the multi-level index from membership.
     idx = mlindex.empty_index(cfg.vmax, cfg.n_levels)
-    for rf in store.levels[0]:
+    for rf in levels[0]:
         idx = mlindex.note_l0_flush(
             idx, rf.arrays.vkeys, rf.arrays.nv,
             jnp.asarray(rf.fid, jnp.int32))
     for lvl in range(1, cfg.n_levels):
-        for rf in store.levels[lvl]:
+        for rf in levels[lvl]:
             idx = mlindex.note_compaction(
                 idx, level=lvl,
                 new_vkeys=rf.arrays.vkeys, new_voff=rf.arrays.voff,
@@ -149,7 +151,6 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
                 range_lo=jnp.asarray(rf.min_vid, jnp.int32),
                 range_hi=jnp.asarray(rf.max_vid + 1, jnp.int32),
                 l0_min_fid_update=jnp.asarray(-1, jnp.int32))
-    store.index = idx
     # Resume τ at the DURABLE floor, not past it: every segment record has
     # ts < wal_floor (a flush persists exactly the records below its
     # rotation boundary), and the WAL tail replays with original ts — so
@@ -158,10 +159,9 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
     # replay-triggered flush with a value ABOVE still-unreplayed records,
     # and a second crash mid-replay would then drop them at the next
     # recovery's `ts >= floor` filter.
-    store._ts = st.wal_floor
-    store._next_fid = max(
-        st.next_fid, max(st.segments, default=-1) + 1)
-    store._publish()
+    store._install_recovered(
+        levels, idx, tau=st.wal_floor,
+        next_fid=max(st.next_fid, max(st.segments, default=-1) + 1))
 
     # -- attach durability BEFORE replay: replay-triggered flushes must run
     #    the normal durable path (segment write + manifest edit + prune).
@@ -178,7 +178,6 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
                              np.asarray(ts)[keep],
                              np.asarray(marker)[keep],
                              np.asarray(prop)[keep])
-    store._publish()
     return store
 
 

@@ -1,11 +1,17 @@
 """Concurrent store: background flush/compaction with live readers
-(paper §4.3 concurrency + Fig 18 mixed workload)."""
+(paper §4.3 concurrency + Fig 18 mixed workload), plus the epoch-published
+StoreState stress suite: pinned-snapshot oracle equality under churn, the
+no-writer-locks-on-the-read-path guarantee (lock spy), and spliced-spine ==
+from-scratch-spine byte identity."""
+import threading
 import time
 
 import numpy as np
 import pytest
 
+from repro.core import store as store_mod
 from repro.core.concurrent import ConcurrentLSMGraph
+from repro.core.store import LSMGraph
 from conftest import small_store_cfg
 
 
@@ -52,3 +58,298 @@ def test_insert_after_close_raises():
     g.close()
     with pytest.raises(RuntimeError):
         g.insert_edges([3], [4])
+
+
+# ===================== epoch-published StoreState stress suite =============
+
+def _make_edge_log(n, vmax, seed, del_every=7):
+    """Deterministic single-writer record log: record i is applied with
+    ts == i (the store assigns ts sequentially), so a snapshot pinned at
+    tau == T sees EXACTLY the first T records — the per-tau oracle."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, vmax, n).astype(np.int64)
+    dst = rng.integers(0, vmax, n).astype(np.int64)
+    delete = np.zeros(n, bool)
+    for i in range(del_every, n, del_every):
+        # Delete an edge inserted earlier in the log (self-consistent
+        # tombstone: annihilates a known prior insert).
+        j = int(rng.integers(0, i))
+        src[i], dst[i], delete[i] = src[j], dst[j], True
+    return src, dst, delete
+
+
+def _oracle_adjacency(src, dst, delete, tau, queries):
+    """Live adjacency per query vertex from the first ``tau`` log records
+    (last record per (src, dst) key wins)."""
+    state = {}
+    for i in range(int(tau)):
+        state[(int(src[i]), int(dst[i]))] = not delete[i]
+    out = {int(q): set() for q in queries}
+    for (u, v), live in state.items():
+        if live and u in out:
+            out[u].add(v)
+    return out
+
+
+class _LockSpy:
+    """Context-manager proxy over a store lock: records which THREAD
+    acquires it, then delegates.  Installed over the four writer locks to
+    prove readers never touch them."""
+
+    def __init__(self, inner, name, log):
+        self._inner, self._name, self._log = inner, name, log
+
+    def acquire(self, *a, **k):
+        self._log.append((threading.current_thread().name, self._name))
+        return self._inner.acquire(*a, **k)
+
+    def release(self):
+        return self._inner.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self._inner.release()
+        return False
+
+
+def _spy_on_writer_locks(g: LSMGraph):
+    log = []
+    for name in ("_lock", "_write_lock", "_flush_lock", "_compact_lock"):
+        setattr(g, name, _LockSpy(getattr(g, name), name, log))
+    return log
+
+
+def test_readers_pin_oracle_taus_under_flush_compact_churn():
+    """N reader threads snapshot + resolve at full tilt while one writer
+    ingests the deterministic log and the main thread forces flush +
+    compaction churn.  Every pinned tau must serve byte-identical results
+    to the log-prefix oracle, and no reader thread may ever acquire a
+    store writer lock."""
+    cfg = small_store_cfg(hash_slots=1 << 13, ovf_cap=1 << 13)
+    g = LSMGraph(cfg)
+    lock_log = _spy_on_writer_locks(g)
+    n = 6000
+    src, dst, delete = _make_edge_log(n, vmax=cfg.vmax, seed=11)
+    queries = np.unique(src[:256] % cfg.vmax)[:32]
+
+    stop = threading.Event()
+    failures = []
+
+    def writer():
+        try:
+            step = 300
+            for lo in range(0, n, step):
+                hi = min(n, lo + step)
+                ins = ~delete[lo:hi]
+                # Preserve log order: apply the slice record-by-record run
+                # of same-op prefixes (insert/delete segments).
+                i = lo
+                while i < hi:
+                    j = i
+                    while j < hi and delete[j] == delete[i]:
+                        j += 1
+                    if delete[i]:
+                        g.delete_edges(src[i:j], dst[i:j])
+                    else:
+                        g.insert_edges(src[i:j], dst[i:j])
+                    i = j
+        except BaseException as e:  # surface to the main thread
+            failures.append(e)
+        finally:
+            stop.set()
+
+    def reader():
+        try:
+            while not stop.is_set():
+                snap = g.snapshot()
+                try:
+                    tau = snap.tau
+                    res = snap.neighbors_batch(queries)
+                    want = _oracle_adjacency(src, dst, delete, tau, queries)
+                    for q, r in zip(queries, res):
+                        got = set(int(x) for x in np.asarray(r))
+                        if got != want[int(q)]:
+                            failures.append(AssertionError(
+                                f"tau={tau} v={int(q)}: got {sorted(got)} "
+                                f"!= want {sorted(want[int(q)])}"))
+                            return
+                finally:
+                    snap.release()
+        except BaseException as e:
+            failures.append(e)
+
+    readers = [threading.Thread(target=reader, name=f"reader-{i}")
+               for i in range(3)]
+    wr = threading.Thread(target=writer, name="stress-writer")
+    for t in readers:
+        t.start()
+    wr.start()
+    # Main thread: maintenance churn racing the readers (flush rotates the
+    # MemGraph, compaction rewrites run membership mid-pin).
+    while not stop.is_set():
+        g.flush_memgraph()
+        g.compact_l0()
+        time.sleep(0.01)
+    wr.join(timeout=60)
+    for t in readers:
+        t.join(timeout=60)
+    assert not failures, failures[0]
+
+    # (b) the lock spy: every writer-lock acquisition came from the writer,
+    # the compactor (main thread), or churn — NEVER from a reader thread.
+    reader_acquisitions = [(thr, lk) for thr, lk in lock_log
+                           if thr.startswith("reader-")]
+    assert reader_acquisitions == [], reader_acquisitions
+    assert lock_log, "spy saw no writer activity — test is vacuous"
+
+    # Final state equals the full-log oracle.
+    snap = g.snapshot()
+    want = _oracle_adjacency(src, dst, delete, n, queries)
+    for q, r in zip(queries, snap.neighbors_batch(queries)):
+        assert set(int(x) for x in np.asarray(r)) == want[int(q)]
+    snap.release()
+
+
+def test_spliced_spine_equals_from_scratch():
+    """Flush/compaction publishes splice ONLY the changed run streams into
+    the previous merged spine.  The result must be byte-identical (on the
+    valid prefix, with rids compared through their fid mapping) to a
+    from-scratch tournament merge of the same state."""
+    from repro.kernels.merge import MERGE_STATS
+    cfg = small_store_cfg()
+    g = LSMGraph(cfg)
+    rng = np.random.default_rng(5)
+    queries = np.arange(0, cfg.vmax, 97, dtype=np.int64)
+
+    def warm():
+        snap = g.snapshot()
+        snap.neighbors_batch(queries)  # forces the spine build
+        snap.release()
+        return snap.state
+
+    for round_ in range(4):
+        s = rng.integers(0, cfg.vmax, 1500).astype(np.int64)
+        d = rng.integers(0, cfg.vmax, 1500).astype(np.int64)
+        g.insert_edges(s, d)
+        g.flush_memgraph()
+        warm()
+    g.compact_l0()
+    MERGE_STATS.reset()
+    st = warm()
+    bb_incremental = st.spine.get(st, g)
+
+    # From-scratch: same state, fresh splice cache => full rebuild.
+    old_cache = g._spine_cache
+    try:
+        g._spine_cache = store_mod._SpineCache()
+        bb_scratch = store_mod._build_state_backbone(st, g)
+    finally:
+        g._spine_cache = old_cache
+
+    def canon(bb):
+        s_np = np.asarray(bb.src)
+        valid = s_np != store_mod.INVALID_VID
+        fid_of = np.array([rf.fid for rf, _col in bb.runs] or [0], np.int64)
+        rid = np.asarray(bb.rid)[valid]
+        fid = np.where(rid < 0, -1, fid_of[np.minimum(rid, len(fid_of) - 1)])
+        return (s_np[valid], np.asarray(bb.dst)[valid],
+                np.asarray(bb.ts)[valid], fid,
+                np.asarray(bb.marker)[valid], np.asarray(bb.prop)[valid])
+
+    for a, b in zip(canon(bb_incremental), canon(bb_scratch)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_snapshots_share_one_spine_per_epoch():
+    """Satellite 6 regression: snapshots at the same epoch share ONE spine
+    handle (built at most once); a plain apply (no seal) carries the handle
+    forward, while a flush installs a fresh one."""
+    cfg = small_store_cfg()
+    g = LSMGraph(cfg)
+    g.insert_edges([1, 2, 3], [4, 5, 6])
+    g.flush_memgraph()
+    s1, s2 = g.snapshot(), g.snapshot()
+    assert s1.state.spine is s2.state.spine
+    b1 = s1._get_backbone()
+    assert s2.spine_ready()          # s2 sees s1's build instantly
+    assert s2._get_backbone() is b1  # the very same object, not a copy
+    # A non-sealing apply reuses the spine (reader latency stays flat) ...
+    g.insert_edges([7], [8])
+    s3 = g.snapshot()
+    assert s3.state.spine is s1.state.spine
+    # ... while a flush (sealed data changed) installs a fresh handle.
+    g.flush_memgraph()
+    s4 = g.snapshot()
+    assert s4.state.spine is not s1.state.spine
+    for s in (s1, s2, s3, s4):
+        s.release()
+
+
+def test_sharded_readers_survive_concurrent_fence():
+    """Readers keep resolving through a ShardedGraphStore while a shard is
+    fenced mid-run: pinned sharded snapshots stay fully readable, new ones
+    serve degraded (fenced range masked) without blocking on health state."""
+    from repro.shard.store import ShardedGraphStore
+    from repro.storage.errors import CorruptionError
+    cfg = small_store_cfg()
+    g = ShardedGraphStore(cfg, n_shards=4)
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, cfg.vmax, 3000).astype(np.int64)
+    dst = rng.integers(0, cfg.vmax, 3000).astype(np.int64)
+    g.insert_edges(src, dst)
+    oracle = {}
+    for u, v in zip(src, dst):
+        oracle.setdefault(int(u), set()).add(int(v))
+    queries = np.arange(0, cfg.vmax, 53, dtype=np.int64)
+    pinned = g.snapshot()
+
+    stop = threading.Event()
+    failures = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                with g.snapshot() as snap:
+                    res, rep = snap.neighbors_batch(queries,
+                                                    with_report=True)
+                masked = set(rep.positions.tolist())
+                for i, q in enumerate(queries.tolist()):
+                    if i in masked:
+                        continue
+                    got = set(int(x) for x in np.asarray(res[i]))
+                    if got != oracle.get(q, set()):
+                        failures.append(AssertionError(
+                            f"v={q}: {sorted(got)} != "
+                            f"{sorted(oracle.get(q, set()))}"))
+                        return
+        except BaseException as e:
+            failures.append(e)
+
+    threads = [threading.Thread(target=reader, name=f"shard-reader-{i}")
+               for i in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    g.fence(2, CorruptionError("injected: concurrent fence"))
+    time.sleep(0.15)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not failures, failures[0]
+
+    # The pinned snapshot predates the fence: still answers EVERYTHING.
+    res = pinned.neighbors_batch(queries)
+    for q, r in zip(queries.tolist(), res):
+        assert set(int(x) for x in np.asarray(r)) == oracle.get(q, set())
+    pinned.release()
+    # New snapshots mask exactly the fenced shard's range.
+    with g.snapshot() as snap:
+        _res, rep = snap.neighbors_batch(queries, with_report=True)
+    assert rep.shards == (2,)
+    lo, hi = g.part.shard_range(2)
+    for pos in rep.positions.tolist():
+        assert lo <= queries[pos] < hi
+    g.close()

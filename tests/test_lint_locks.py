@@ -1,0 +1,131 @@
+"""The lock-discipline linter (tools/lint_locks.py): passes on the real
+tree, fails on seeded violations of each rule."""
+import importlib.util
+import os
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+STORE = os.path.join(REPO, "src", "repro", "core", "store.py")
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location(
+        "lint_locks", os.path.join(REPO, "tools", "lint_locks.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def lint():
+    return _load()
+
+
+def test_tree_is_clean(lint):
+    with open(STORE) as f:
+        src = f.read()
+    assert lint.lint_source(src, STORE) == []
+
+
+def test_cli_passes_on_tree(lint, capsys):
+    assert lint.main([STORE]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+RULE1_BAD = """
+import jax.numpy as jnp
+
+class LSMGraph:
+    def commit(self):
+        with self._lock:
+            pad = jnp.zeros(4)  # device dispatch under the commit lock
+            self._state = pad
+"""
+
+RULE1_NESTED_BAD = """
+from . import memgraph as mg_mod
+
+class LSMGraph:
+    def commit(self, flag):
+        with self._write_lock:
+            with self._lock:
+                if flag:
+                    fresh = mg_mod.empty_memgraph(self.cfg)
+"""
+
+RULE1_OK = """
+import numpy as np
+
+class LSMGraph:
+    def commit(self):
+        with self._lock:
+            ts = np.arange(4)  # host-only work is fine
+            version = self.versions.publish((0,), (), 0)
+            self._swap_state(tau=int(ts[-1]), version=version)
+"""
+
+RULE2_SNAPSHOT_BAD = """
+class Snapshot:
+    def neighbors(self, v):
+        with self._store._lock:
+            return self._resolve(v)
+"""
+
+RULE2_SPINE_BAD = """
+class _SpineHandle:
+    def get(self, state, store):
+        with store._flush_lock:
+            return self._bb
+"""
+
+RULE2_SNAPSHOT_METHOD_BAD = """
+class LSMGraph:
+    def snapshot(self):
+        with self._compact_lock:
+            return Snapshot(self, self._state)
+"""
+
+RULE2_OK = """
+class Snapshot:
+    def neighbors(self, v):
+        return self.state.spine.get(self.state, self._store)
+
+class _SpineHandle:
+    def get(self, state, store):
+        with self._mu:  # read-side latch, not a writer lock
+            return self._bb
+
+class LSMGraph:
+    def snapshot(self):
+        st = self._state
+        self.versions.pin(st.version, st.tau)
+        return Snapshot(self, st)
+
+    def flush_memgraph(self):
+        with self._flush_lock:  # writer method: locks allowed
+            pass
+"""
+
+
+@pytest.mark.parametrize("src,rule", [
+    (RULE1_BAD, 1), (RULE1_NESTED_BAD, 1),
+    (RULE2_SNAPSHOT_BAD, 2), (RULE2_SPINE_BAD, 2),
+    (RULE2_SNAPSHOT_METHOD_BAD, 2),
+])
+def test_seeded_violations_fail(lint, src, rule):
+    vs = lint.lint_source(src, "seeded.py")
+    assert vs, "expected at least one violation"
+    assert all(v.rule == rule for v in vs)
+
+
+@pytest.mark.parametrize("src", [RULE1_OK, RULE2_OK])
+def test_clean_patterns_pass(lint, src):
+    assert lint.lint_source(src, "clean.py") == []
+
+
+def test_cli_fails_on_seeded_violation(lint, tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(RULE1_BAD)
+    assert lint.main([str(bad)]) == 1
+    assert "rule 1" in capsys.readouterr().err

@@ -1,0 +1,152 @@
+#!/usr/bin/env python
+"""AST lint enforcing the store's lock discipline.
+
+The epoch-published StoreState design (see ``repro/core/__init__.py``,
+"Concurrency model") stands on two statically-checkable rules:
+
+Rule 1 — **no device work under the commit lock**.  ``LSMGraph._lock`` is
+the short host-only lock around ts assignment and the state-reference swap;
+any ``jnp``/``jax``/kernel/module call inside a ``with self._lock:`` body
+in ``core/store.py`` would let an XLA dispatch (or a jit compile!) block
+every concurrent committer.  Host-side ``np`` work is allowed — it is
+bounded and allocation-only.
+
+Rule 2 — **the read path takes no writer locks**.  ``Snapshot`` methods,
+the shared spine machinery (``_SpineHandle``/``_SpineCache``/the spine
+build helpers), and ``LSMGraph.snapshot`` itself must never acquire (or
+even mention) ``_lock``/``_write_lock``/``_flush_lock``/``_compact_lock``
+— a reader touching any of them reintroduces the reader-blocks-on-writer
+coupling the refactor removed.  Read-side helper latches deliberately use
+the name ``_mu`` so this rule can ban the four writer-lock names outright.
+
+Run via ``make lint-locks`` (wired into the tier-1 CI workflow); exits 1
+with file:line diagnostics on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from typing import List, NamedTuple
+
+# Module aliases whose calls dispatch device work (or jit-compile) in
+# core/store.py.  Host-side numpy stays allowed under the commit lock.
+DEVICE_ROOTS = {"jnp", "jax", "kops", "mg_mod", "csr", "mlindex"}
+
+WRITER_LOCKS = {"_lock", "_write_lock", "_flush_lock", "_compact_lock"}
+
+# Read-path scopes in core/store.py: every method of these classes ...
+READ_PATH_CLASSES = {"Snapshot", "_SpineHandle", "_SpineCache",
+                     "_ReadBackbone"}
+# ... these module-level helpers (the spine build/splice pipeline) ...
+READ_PATH_FUNCS = {"_build_state_backbone", "_build_run_spine",
+                   "_splice_run_spine", "_spine_run_streams",
+                   "_fit_spine_cols"}
+# ... and these methods of LSMGraph (the lock-free read entry points).
+READ_PATH_METHODS = {("LSMGraph", "snapshot")}
+
+
+class Violation(NamedTuple):
+    filename: str
+    lineno: int
+    rule: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.filename}:{self.lineno}: [rule {self.rule}] " \
+               f"{self.message}"
+
+
+def _call_root(node: ast.AST):
+    """Leftmost Name of a (possibly dotted) call target, else None."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _is_self_lock(expr: ast.AST) -> bool:
+    return (isinstance(expr, ast.Attribute) and expr.attr == "_lock"
+            and isinstance(expr.value, ast.Name) and expr.value.id == "self")
+
+
+def _check_commit_lock_bodies(tree: ast.AST, filename: str,
+                              out: List[Violation]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.With, ast.AsyncWith)):
+            continue
+        if not any(_is_self_lock(item.context_expr) for item in node.items):
+            continue
+        for stmt in node.body:
+            for sub in ast.walk(stmt):
+                if not isinstance(sub, ast.Call):
+                    continue
+                root = _call_root(sub.func)
+                if root in DEVICE_ROOTS:
+                    out.append(Violation(
+                        filename, sub.lineno, 1,
+                        f"device-dispatching call `{ast.unparse(sub.func)}`"
+                        " inside a `with self._lock:` body — the commit "
+                        "lock is host-only; move the device work outside"))
+
+
+def _check_read_path(tree: ast.AST, filename: str,
+                     out: List[Violation]) -> None:
+    def scan(scope_node: ast.AST, scope_name: str) -> None:
+        for sub in ast.walk(scope_node):
+            if isinstance(sub, ast.Attribute) and sub.attr in WRITER_LOCKS:
+                out.append(Violation(
+                    filename, sub.lineno, 2,
+                    f"read-path scope `{scope_name}` references writer "
+                    f"lock `{sub.attr}` — snapshots and the shared spine "
+                    "must never take (or touch) store writer locks"))
+
+    for node in tree.body if isinstance(tree, ast.Module) else []:
+        if isinstance(node, ast.ClassDef):
+            if node.name in READ_PATH_CLASSES:
+                scan(node, node.name)
+            else:
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)) and \
+                            (node.name, item.name) in READ_PATH_METHODS:
+                        scan(item, f"{node.name}.{item.name}")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name in READ_PATH_FUNCS:
+            scan(node, node.name)
+
+
+def lint_source(src: str, filename: str = "<string>") -> List[Violation]:
+    """Both rules over one source blob; returns the violation list."""
+    tree = ast.parse(src, filename)
+    out: List[Violation] = []
+    _check_commit_lock_bodies(tree, filename, out)
+    _check_read_path(tree, filename, out)
+    out.sort(key=lambda v: v.lineno)
+    return out
+
+
+DEFAULT_TARGETS = ["src/repro/core/store.py"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", default=None,
+                    help="files to lint (default: the core store)")
+    args = ap.parse_args(argv)
+    files = args.files or DEFAULT_TARGETS
+    n_bad = 0
+    for path in files:
+        with open(path) as f:
+            src = f.read()
+        for v in lint_source(src, path):
+            print(v, file=sys.stderr)
+            n_bad += 1
+    if n_bad:
+        print(f"lint-locks: {n_bad} violation(s)", file=sys.stderr)
+        return 1
+    print(f"lint-locks: OK ({len(files)} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
