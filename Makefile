@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 tier1-shard test bench bench-smoke chaos-smoke lint-locks
+.PHONY: tier1 tier1-shard test bench bench-smoke chaos-smoke obs-smoke lint-locks
 
 # Fast verification gate: everything except the `slow`-marked end-to-end
 # tests (test_distributed.py spawns an 8-device subprocess mesh,
@@ -32,6 +32,12 @@ bench-smoke:
 # Fixed seeds keep it deterministic and under ~30s.
 chaos-smoke:
 	$(PY) -m repro.storage.chaostest --schedules 12 --seed 0
+
+# Metrics-pipeline gate: tiny-scale `graph_service --metrics` runs (single
+# durable + sharded durable) with schema validation of the per-phase
+# reports — every per-layer metric family must be present and well-formed.
+obs-smoke:
+	$(PY) tools/obs_smoke.py
 
 # Lock-discipline gate: AST lint of core/store.py — no device work under
 # the commit lock, no writer-lock acquisition on the snapshot read path

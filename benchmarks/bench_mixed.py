@@ -13,6 +13,7 @@ import numpy as np
 from repro.analytics import materialize_csr, sssp
 from repro.core.concurrent import ConcurrentLSMGraph
 from repro.core.store import LSMGraph
+from repro.obs.registry import Histogram
 
 from .common import SMOKE, V, emit, graph_edges, store_cfg
 
@@ -49,22 +50,23 @@ def run() -> list:
 
 
 def _reader_phase(g: LSMGraph, queries: np.ndarray, n_readers: int,
-                  duration: float) -> np.ndarray:
+                  duration: float) -> Histogram:
     """``n_readers`` threads loop snapshot -> neighbors_batch -> release
-    for ``duration`` seconds; returns every per-call latency (seconds)."""
+    for ``duration`` seconds; per-call latencies land in a shared
+    high-resolution ``obs`` histogram (thread-safe observe, so no
+    per-thread slots to concatenate) returned for percentile extraction."""
     stop = threading.Event()
-    lats = [[] for _ in range(n_readers)]
+    hist = Histogram("bench_read_latency_seconds", buckets_per_decade=60)
 
-    def loop(slot: list) -> None:
+    def loop() -> None:
         while not stop.is_set():
             t0 = time.perf_counter()
             snap = g.snapshot()
             snap.neighbors_batch(queries)
             snap.release()
-            slot.append(time.perf_counter() - t0)
+            hist.observe(time.perf_counter() - t0)
 
-    threads = [threading.Thread(target=loop, args=(lats[i],),
-                                name=f"bench-reader-{i}")
+    threads = [threading.Thread(target=loop, name=f"bench-reader-{i}")
                for i in range(n_readers)]
     for t in threads:
         t.start()
@@ -72,7 +74,7 @@ def _reader_phase(g: LSMGraph, queries: np.ndarray, n_readers: int,
     stop.set()
     for t in threads:
         t.join()
-    return np.array([x for slot in lats for x in slot])
+    return hist
 
 
 def run_read_under_ingest() -> list:
@@ -138,19 +140,19 @@ def run_read_under_ingest() -> list:
     wt.join()
     w_dt = time.perf_counter() - t0
 
-    p50_i, p99_i = np.percentile(idle, [50, 99])
-    p50_w, p99_w = np.percentile(ingest, [50, 99])
+    p50_i, p99_i = idle.percentiles([50, 99])
+    p50_w, p99_w = ingest.percentiles([50, 99])
     ratio = p99_w / p99_i if p99_i > 0 else float("inf")
     eps = n_written[0] / w_dt if w_dt > 0 else 0.0
     return [
         ("read_under_ingest_idle_p50", p50_i * 1e6,
          f"readers={n_readers}"),
         ("read_under_ingest_idle_p99", p99_i * 1e6,
-         f"n_calls={len(idle)}"),
+         f"n_calls={idle.snapshot()['count']}"),
         ("read_under_ingest_busy_p50", p50_w * 1e6,
          f"readers={n_readers}"),
         ("read_under_ingest_busy_p99", p99_w * 1e6,
-         f"n_calls={len(ingest)}"),
+         f"n_calls={ingest.snapshot()['count']}"),
         ("read_under_ingest_p99_ratio", ratio * 1e6,  # ratio, not us
          f"busy/idle={ratio:.2f}x"),
         ("read_under_ingest_writer_rate", (w_dt / max(n_written[0], 1)) * 1e6,

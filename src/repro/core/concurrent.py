@@ -20,10 +20,12 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import traceback
 from typing import Optional
 
 import numpy as np
 
+from .. import obs
 from .store import LSMGraph, Snapshot
 from .types import StoreConfig
 from . import memgraph as mg_mod
@@ -43,6 +45,11 @@ class ConcurrentLSMGraph:
         self._q: "queue.Queue" = queue.Queue(maxsize=256)
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
+        # Structured capture of the most recent background failure per
+        # thread: {"work", "error", "traceback"} — surfaced by _check()'s
+        # raise chain, close()'s leak report, and the registry counter
+        # below (no bare print_exc to a lost stderr).
+        self.last_errors: dict = {}
         self._compact_request = threading.Event()
         # Current work item per background thread, for close()'s leak
         # report: when a join times out, naming what the thread is stuck on
@@ -101,6 +108,8 @@ class ConcurrentLSMGraph:
             detail = "; ".join(
                 f"{name} thread still alive after join timeout"
                 + (f" (stuck on: {work})" if work else "")
+                + (f" (last error: {self.last_errors[name]['error']})"
+                   if name in self.last_errors else "")
                 for name, _t, work in leaked)
             raise RuntimeError(f"close() leaked background threads: {detail}")
         self.store.close()  # durable: fsync WAL tail + release handles
@@ -110,6 +119,20 @@ class ConcurrentLSMGraph:
     def _check(self) -> None:
         if self._error is not None:
             raise RuntimeError("background thread failed") from self._error
+
+    def _note_error(self, thread_name: str, e: BaseException) -> None:
+        """Record a background failure: structured last-error capture (for
+        ``_check``/``close``) plus a registry counter — never a bare
+        ``print_exc`` that vanishes with a redirected stderr."""
+        self.last_errors[thread_name] = {
+            "work": self._busy.get(thread_name),
+            "error": repr(e),
+            "traceback": traceback.format_exc(),
+        }
+        obs.counter("store_background_errors_total",
+                    thread=thread_name).inc()
+        self._error = e
+        self._stop.set()
 
     def _writer_loop(self) -> None:
         store = self.store
@@ -127,10 +150,7 @@ class ConcurrentLSMGraph:
                 if mg_mod.memgraph_should_flush(store.mem, store.cfg):
                     self._compact_request.set()
             except BaseException as e:  # surface to callers
-                import traceback
-                traceback.print_exc()
-                self._error = e
-                self._stop.set()
+                self._note_error("writer", e)
             finally:
                 self._busy["writer"] = None
                 self._q.task_done()
@@ -150,9 +170,6 @@ class ConcurrentLSMGraph:
                 # own background thread (wal.py), off the writer's critical
                 # path; close() below issues the final barrier.
             except BaseException as e:
-                import traceback
-                traceback.print_exc()
-                self._error = e
-                self._stop.set()
+                self._note_error("compactor", e)
             finally:
                 self._busy["compactor"] = None

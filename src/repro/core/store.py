@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import os
 import threading
 import time
@@ -37,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import csr, index as mlindex, memgraph as mg_mod
+from .. import obs
 from ..kernels import ops as kops
 from ..kernels.merge import MERGE_STATS as _MERGE_STATS
 from .types import (BYTES_PER_EDGE, BYTES_PER_PROP, INVALID_VID, EdgeBatch,
@@ -65,6 +67,10 @@ _PREFETCH_WORKERS = int(os.environ.get(
     str(max(1, min(4, (os.cpu_count() or 2) - 1)))))
 _PREFETCH_POOL: Optional[ThreadPoolExecutor] = None
 _PREFETCH_POOL_LOCK = threading.Lock()
+
+# Default per-process store ordinal for metric labels: each LSMGraph gets a
+# bounded-cardinality ``store="s<N>"`` label unless the caller names it.
+_STORE_ORDINAL = itertools.count()
 
 
 def prefetch_pool() -> ThreadPoolExecutor:
@@ -233,6 +239,7 @@ class _SpineCache:
         with self._mu:
             base = self._base
             if base is not None and base.fids == fids:
+                _MERGE_STATS.bump("spine_reuse")
                 return base
             if base is not None and fids and (base.fids & fids):
                 spine = _splice_run_spine(base, runs)
@@ -332,7 +339,8 @@ class LSMGraph:
     ``_lock`` (> ``versions._lock``); any prefix may be skipped, never
     reordered."""
 
-    def __init__(self, cfg: StoreConfig, durability=None):
+    def __init__(self, cfg: StoreConfig, durability=None,
+                 obs_label: Optional[str] = None):
         cfg.validate()
         self.cfg = cfg
         # Optional durability engine (repro.storage.DurableStorage): WAL /
@@ -344,7 +352,21 @@ class LSMGraph:
         self._compact_lock = threading.RLock()  # serializes compactions
         self._fid_lock = threading.Lock()
         self.versions = VersionChain()
-        self.io = IOCounters()
+        # Observability: one label per store instance; instruments are
+        # resolved once here so hot paths touch cached references only.
+        self.obs_label = obs_label or f"s{next(_STORE_ORDINAL)}"
+        self.io = IOCounters().bind(store=self.obs_label)
+        self._obs_apply = obs.histogram("store_apply_seconds",
+                                        store=self.obs_label)
+        self._obs_resolve = obs.histogram("read_resolve_seconds",
+                                          store=self.obs_label)
+        self._obs_publish = obs.counter("store_state_publish_total",
+                                        store=self.obs_label)
+        self._obs_l0_depth = obs.gauge("store_l0_depth",
+                                       store=self.obs_label)
+        self._obs_level_runs = tuple(
+            obs.gauge("store_level_runs", store=self.obs_label, level=str(i))
+            for i in range(cfg.n_levels))
         self.on_flush_needed = None  # callback for the concurrent wrapper
         self._ts = 0
         self._next_fid = 0
@@ -405,7 +427,18 @@ class LSMGraph:
         cur = self._state
         nxt = dataclasses.replace(cur, epoch=cur.epoch + 1, **fields)
         self._state = nxt
+        self._obs_publish.inc()  # host-only: safe under the commit lock
         return nxt
+
+    def _obs_update_level_gauges(self,
+                                 levels: Tuple[Tuple[RunFile, ...], ...]
+                                 ) -> None:
+        """Refresh the L0-depth / runs-per-level gauges after a membership
+        commit (flush, compaction, recovery, empty-run drop).  Off the
+        commit lock: callers pass the levels tuple they just published."""
+        self._obs_l0_depth.set(len(levels[0]))
+        for g, lvl in zip(self._obs_level_runs, levels):
+            g.set(len(lvl))
 
     def note_health_change(self) -> None:
         """Republish after a quarantine or heal: the next state carries the
@@ -482,6 +515,7 @@ class LSMGraph:
                         "background flush did not relieve a hard-full "
                         "MemGraph within 60 s")
             marker = np.full(n, delete, bool)
+            t_chunk = time.perf_counter()
             with self._write_lock:
                 st = self._state
                 with self._lock:
@@ -512,6 +546,7 @@ class LSMGraph:
                     # tau advances ONLY with a mem publish — every other
                     # commit keeps the tau of the content it carries.
                     self._swap_state(mem=new_mem, tau=self._ts)
+            self._obs_apply.observe(time.perf_counter() - t_chunk)
             if allow_flush and mg_mod.memgraph_should_flush(
                     self._state.mem, self.cfg):
                 self.flush_memgraph()
@@ -584,62 +619,70 @@ class LSMGraph:
         with self._flush_lock:
             if int(self._state.mem.ne) == 0:
                 return None
-            fresh = mg_mod.empty_memgraph(self.cfg)  # device work, pre-lock
-            deg = self.degraded_ranges()
-            with self._write_lock:
-                # _write_lock excludes in-flight appliers: self._ts is
-                # exactly the published tau and no WAL record interleaves
-                # between the rotate swap and on_flush_rotate below.
+            with obs.REGISTRY.span("store_flush", store=self.obs_label):
+                fresh = mg_mod.empty_memgraph(self.cfg)  # device, pre-lock
+                deg = self.degraded_ranges()
+                with self._write_lock:
+                    # _write_lock excludes in-flight appliers: self._ts is
+                    # exactly the published tau and no WAL record
+                    # interleaves between the rotate swap and
+                    # on_flush_rotate below.
+                    with self._lock:
+                        st = self._state
+                        if int(st.mem.ne) == 0:
+                            return None
+                        mem_id = self._next_mem_id
+                        self._next_mem_id += 1
+                        wal_floor = self._ts  # every record below this ts
+                        # is in mem_full or already-flushed runs
+                        version = self.versions.publish(
+                            (mem_id, st.mem_id),
+                            tuple(r.fid for r in st.levels[0]), self._ts)
+                        # Rotate double buffer: full MemGraph stays readable.
+                        self._swap_state(
+                            mem=fresh, mem_id=mem_id, mem_full=st.mem,
+                            mem_full_id=st.mem_id, version=version,
+                            degraded=deg, spine=_SpineHandle())
+                        mem_full = st.mem
+                    if self.durability is not None:
+                        self.durability.on_flush_rotate(wal_floor)
+                src, dst, ts, marker, prop, n = mg_mod.flush_arrays(mem_full)
+                cap = csr.quantize_cap(int(n))
+                run = csr.build_run_arrays(src, dst, ts, marker, prop, n,
+                                           vcap=cap)
+                run = csr.repad_run(run, cap, cap)
+                rf = self._wrap(run, level=0)
+                # Index update off-lock: _flush_lock (held) is the only
+                # serializer of index mutation; apply publishes never touch
+                # it.
+                new_index = mlindex.note_l0_flush(
+                    self._state.index, run.vkeys, run.nv,
+                    jnp.asarray(rf.fid, jnp.int32))
+                self.io.flush_write += rf.nbytes
+                self.io.index_write += int(run.nv) * 8
+                new_runs = dict(self._state.runs_by_fid)
+                new_runs[rf.fid] = rf
+                deg = self.degraded_ranges()
                 with self._lock:
                     st = self._state
-                    if int(st.mem.ne) == 0:
-                        return None
-                    mem_id = self._next_mem_id
-                    self._next_mem_id += 1
-                    wal_floor = self._ts  # every record below this ts is in
-                    # mem_full or already-flushed runs
+                    new_levels = (st.levels[0] + (rf,),) + st.levels[1:]
                     version = self.versions.publish(
-                        (mem_id, st.mem_id),
-                        tuple(r.fid for r in st.levels[0]), self._ts)
-                    # Rotate double buffer: full MemGraph stays readable.
+                        (st.mem_id,),
+                        tuple(r.fid for r in new_levels[0]), st.tau)
+                    # Flush done: retire the full MemGraph from the state.
                     self._swap_state(
-                        mem=fresh, mem_id=mem_id, mem_full=st.mem,
-                        mem_full_id=st.mem_id, version=version,
+                        levels=new_levels, index=new_index,
+                        runs_by_fid=new_runs, mem_full=None,
+                        mem_full_id=None, version=version,
                         degraded=deg, spine=_SpineHandle())
-                    mem_full = st.mem
+                    need_compact = (len(new_levels[0])
+                                    >= self.cfg.l0_run_limit)
+                self._obs_update_level_gauges(new_levels)
                 if self.durability is not None:
-                    self.durability.on_flush_rotate(wal_floor)
-            src, dst, ts, marker, prop, n = mg_mod.flush_arrays(mem_full)
-            cap = csr.quantize_cap(int(n))
-            run = csr.build_run_arrays(src, dst, ts, marker, prop, n, vcap=cap)
-            run = csr.repad_run(run, cap, cap)
-            rf = self._wrap(run, level=0)
-            # Index update off-lock: _flush_lock (held) is the only
-            # serializer of index mutation; apply publishes never touch it.
-            new_index = mlindex.note_l0_flush(
-                self._state.index, run.vkeys, run.nv,
-                jnp.asarray(rf.fid, jnp.int32))
-            self.io.flush_write += rf.nbytes
-            self.io.index_write += int(run.nv) * 8
-            new_runs = dict(self._state.runs_by_fid)
-            new_runs[rf.fid] = rf
-            deg = self.degraded_ranges()
-            with self._lock:
-                st = self._state
-                new_levels = (st.levels[0] + (rf,),) + st.levels[1:]
-                version = self.versions.publish(
-                    (st.mem_id,),
-                    tuple(r.fid for r in new_levels[0]), st.tau)
-                # Flush done: retire the full MemGraph from the state.
-                self._swap_state(
-                    levels=new_levels, index=new_index, runs_by_fid=new_runs,
-                    mem_full=None, mem_full_id=None, version=version,
-                    degraded=deg, spine=_SpineHandle())
-                need_compact = len(new_levels[0]) >= self.cfg.l0_run_limit
-            if self.durability is not None:
-                # Segment write + manifest flush-edit + WAL prune.  On crash
-                # before the manifest edit lands the WAL tail replays mem_full.
-                self.durability.on_flush_commit(rf, wal_floor=wal_floor)
+                    # Segment write + manifest flush-edit + WAL prune.  On
+                    # crash before the manifest edit lands the WAL tail
+                    # replays mem_full.
+                    self.durability.on_flush_commit(rf, wal_floor=wal_floor)
         if need_compact:
             self.compact_l0()
         return rf
@@ -704,6 +747,7 @@ class LSMGraph:
                     tuple(r.fid for r in new_levels[0]), st.tau)
                 self._swap_state(levels=new_levels, runs_by_fid=new_runs,
                                  version=version, spine=_SpineHandle())
+            self._obs_update_level_gauges(new_levels)
 
     def compact_partial(self, level: int) -> None:
         """Partial compaction: move ONE segment file of `level` down (paper
@@ -726,6 +770,18 @@ class LSMGraph:
                     target_level: int, range_lo: int, range_hi: int,
                     l0_max_fid: Optional[int],
                     also_remove: List[RunFile]) -> None:
+        with obs.REGISTRY.span("store_compaction", store=self.obs_label,
+                               level=str(target_level)):
+            self._merge_into_timed(
+                sources=sources, overlap=overlap, target_level=target_level,
+                range_lo=range_lo, range_hi=range_hi, l0_max_fid=l0_max_fid,
+                also_remove=also_remove)
+
+    def _merge_into_timed(self, *, sources: List[RunFile],
+                          overlap: List[RunFile], target_level: int,
+                          range_lo: int, range_hi: int,
+                          l0_max_fid: Optional[int],
+                          also_remove: List[RunFile]) -> None:
         # ---- compute phase: no lock, immutable inputs ----
         all_runs = [r.ensure_loaded() for r in sources + overlap]
         tot_e = sum(r.ne for r in sources + overlap)
@@ -855,6 +911,7 @@ class LSMGraph:
             self._swap_state(levels=new_levels, index=index,
                              runs_by_fid=new_runs, version=version,
                              degraded=deg, spine=_SpineHandle())
+        self._obs_update_level_gauges(new_levels)
 
     def _resegment(self, merged: csr.CSRRunArrays, level: int) -> List[RunFile]:
         """Split a merged run into segment files at vertex boundaries,
@@ -958,6 +1015,7 @@ class LSMGraph:
                                  runs_by_fid=runs, tau=self._ts,
                                  version=version, degraded=deg,
                                  spine=_SpineHandle())
+        self._obs_update_level_gauges(levels_t)
 
     def degraded_ranges(self) -> tuple:
         """Vertex ranges whose on-disk data is quarantined/unreadable
@@ -1240,6 +1298,16 @@ class Snapshot:
         return self.state.spine.get(self.state, self._store)
 
     def _resolve_batch(self, u: np.ndarray, pad_to: Optional[int] = None):
+        """Timed wrapper over ``_resolve_batch_impl``: every device resolve
+        (one per <= _BATCH_CHUNK query chunk) lands in the owning store's
+        ``read_resolve_seconds`` histogram."""
+        t0 = time.perf_counter()
+        out = self._resolve_batch_impl(u, pad_to)
+        self._store._obs_resolve.observe(time.perf_counter() - t0)
+        return out
+
+    def _resolve_batch_impl(self, u: np.ndarray,
+                            pad_to: Optional[int] = None):
         """Resolve a SORTED UNIQUE query vector: (offsets[B+1], dst, prop),
         with dst ascending within each query's slice (scalar-path order).
 

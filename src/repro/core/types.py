@@ -16,6 +16,8 @@ from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro import obs
+
 # Sentinel for "no vertex" — vertex ids must be < INVALID_VID.
 INVALID_VID = jnp.iinfo(jnp.int32).max
 
@@ -102,6 +104,15 @@ class RunFile:
     def nbytes(self) -> int:
         return self.ne * (BYTES_PER_EDGE + BYTES_PER_PROP)
 
+    # Cold-load instrumentation (slow path only: the resident fast path in
+    # ``ensure_loaded`` stays untouched).  A "hit" is a load that found the
+    # arrays already materialized by prefetch/a concurrent reader once under
+    # the lock; a "miss" pays the actual segment load.
+    _OBS_HIT = obs.counter("read_prefetch_hit_total")
+    _OBS_MISS = obs.counter("read_prefetch_miss_total")
+    _OBS_SCHED = obs.counter("read_prefetch_scheduled_total")
+    _OBS_LOAD = obs.histogram("storage_segment_load_seconds")
+
     def ensure_loaded(self, _retry_counter: str = "read_retries"
                       ) -> CSRRunArrays:
         """Materialize ``arrays`` (no-op when resident).  Returns a local
@@ -124,8 +135,13 @@ class RunFile:
                 if self.loader is None:
                     raise RuntimeError(
                         f"RunFile fid={self.fid} has no arrays and no loader")
+                self._OBS_MISS.inc()
+                t0 = time.perf_counter()
                 a = self._load_with_retry(_retry_counter)
+                self._OBS_LOAD.observe(time.perf_counter() - t0)
                 self.arrays = a
+            else:
+                self._OBS_HIT.inc()
         return a
 
     def _load_with_retry(self, counter_attr: str) -> CSRRunArrays:
@@ -177,6 +193,7 @@ class RunFile:
         except RuntimeError:      # pool shut down: foreground load covers it
             self._prefetching = False
             return False
+        self._OBS_SCHED.inc()
         return True
 
     def evict(self) -> bool:
@@ -272,8 +289,15 @@ class IOCounters:
 
     ``flush_write``/``compaction_*``/``analytics_read``/``index_write`` are
     the paper's logical-bytes proxy (counted in every mode); ``wal_write``,
-    ``segment_write`` and ``segment_read`` count *actual* file bytes and
-    advance only when a durable storage engine is attached.
+    ``segment_write``, ``segment_read`` and ``manifest_write`` count
+    *actual* file bytes and advance only when a durable storage engine is
+    attached.
+
+    After ``bind(registry, **labels)`` every field write is mirrored into
+    registry counters (``io_<field>_bytes``, or ``_total`` for retry
+    counts), so the legacy ``store.io.wal_write += n`` sites keep working
+    unchanged while the exporter sees the same numbers.  ``snapshot()``
+    copies are unbound (frozen-in-time values, not live series).
     """
 
     flush_write: int = 0
@@ -284,8 +308,37 @@ class IOCounters:
     wal_write: int = 0        # durable: WAL record bytes appended
     segment_write: int = 0    # durable: segment file bytes written
     segment_read: int = 0     # durable: segment file bytes (re)loaded
+    manifest_write: int = 0   # durable: manifest edit-log bytes appended
     read_retries: int = 0     # transient-I/O retries on foreground loads
     prefetch_retries: int = 0  # transient-I/O retries in the prefetch pool
+
+    def __setattr__(self, name: str, value) -> None:
+        # Mirror field increments into bound registry counters.  During
+        # __init__ / dataclasses.replace the mirror key is absent from
+        # __dict__, so construction takes the plain path.
+        mirror = self.__dict__.get("_mirror")
+        if mirror is not None:
+            c = mirror.get(name)
+            if c is not None:
+                d = value - self.__dict__.get(name, 0)
+                if d > 0:
+                    c.inc(d)
+        object.__setattr__(self, name, value)
+
+    def bind(self, registry=None, **labels) -> "IOCounters":
+        """Mirror this instance's fields into per-field registry counters,
+        bootstrapping any value accumulated before binding."""
+        registry = registry if registry is not None else obs.REGISTRY
+        mirror = {}
+        for f in dataclasses.fields(self):
+            unit = "total" if f.name.endswith("retries") else "bytes"
+            c = registry.counter(f"io_{f.name}_{unit}", **labels)
+            cur = getattr(self, f.name)
+            if cur > 0:
+                c.inc(cur)
+            mirror[f.name] = c
+        self.__dict__["_mirror"] = mirror
+        return self
 
     def total_write(self) -> int:
         return self.flush_write + self.compaction_write + self.index_write
@@ -310,6 +363,7 @@ class IOCounters:
             wal_write=self.wal_write - other.wal_write,
             segment_write=self.segment_write - other.segment_write,
             segment_read=self.segment_read - other.segment_read,
+            manifest_write=self.manifest_write - other.manifest_write,
             read_retries=self.read_retries - other.read_retries,
             prefetch_retries=self.prefetch_retries - other.prefetch_retries,
         )

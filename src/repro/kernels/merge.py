@@ -35,52 +35,73 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import obs
+
 BT = 256  # output tile size
 _I32MAX = jnp.iinfo(jnp.int32).max
 
 
 class MergeStats:
-    """Thread-safe merge-path counters (bumped from reader threads, the
-    compactor, and the spine splicer concurrently — a bare dict loses
-    increments under the race).  Mapping-compatible reads (`stats["k"]`,
-    `dict(stats)`) keep existing callers/tests working; writers must go
-    through ``bump``."""
+    """Merge-path counters as a view over the metric registry.
 
-    _KEYS = ("kernel_merge", "host_lexsort", "spine_build", "spine_splice")
+    Each key is backed by a monotonic ``merge_<key>_total`` registry
+    counter (thread-safe: bumped from reader threads, the compactor, and
+    the spine splicer concurrently), so the exporter and the legacy
+    mapping read surface (`stats["k"]`, `dict(stats)`) see one set of
+    numbers.  ``reset()`` keeps its test-facing zero-the-view semantics by
+    remembering per-key base offsets — the registry counters themselves
+    stay monotonic.  Writers must go through ``bump``."""
 
-    def __init__(self) -> None:
+    _KEYS = ("kernel_merge", "host_lexsort", "spine_build", "spine_splice",
+             "spine_reuse")
+
+    def __init__(self, registry=None) -> None:
         self._mu = threading.Lock()
-        self._counts: Dict[str, int] = {k: 0 for k in self._KEYS}
+        self._registry = registry if registry is not None else obs.REGISTRY
+        self._counters = {k: self._registry.counter(f"merge_{k}_total")
+                          for k in self._KEYS}
+        self._base: Dict[str, int] = {k: 0 for k in self._KEYS}
+
+    def _counter(self, key: str):
+        c = self._counters.get(key)
+        if c is None:
+            with self._mu:
+                c = self._counters.get(key)
+                if c is None:
+                    c = self._registry.counter(f"merge_{key}_total")
+                    self._counters[key] = c
+                    self._base[key] = 0
+        return c
 
     def bump(self, key: str, n: int = 1) -> None:
-        with self._mu:
-            self._counts[key] = self._counts.get(key, 0) + n
+        self._counter(key).inc(n)
 
     def snapshot_stats(self) -> Dict[str, int]:
         """Point-in-time copy of every counter (the test-facing accessor)."""
         with self._mu:
-            return dict(self._counts)
+            return {k: c.value - self._base[k]
+                    for k, c in self._counters.items()}
 
     def reset(self) -> None:
         with self._mu:
-            for k in list(self._counts):
-                self._counts[k] = 0
+            for k, c in self._counters.items():
+                self._base[k] = c.value
 
     # Mapping-compatible read surface: dict(stats) and stats["key"] work.
     def __getitem__(self, key: str) -> int:
         with self._mu:
-            return self._counts[key]
+            return self._counters[key].value - self._base[key]
 
     def keys(self):
         with self._mu:
-            return list(self._counts.keys())
+            return list(self._counters.keys())
 
     def __iter__(self):
         return iter(self.keys())
 
     def __len__(self) -> int:
         with self._mu:
-            return len(self._counts)
+            return len(self._counters)
 
 
 MERGE_STATS = MergeStats()

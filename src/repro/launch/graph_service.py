@@ -9,15 +9,59 @@ analytics (PageRank / BFS / SSSP) run against consistent snapshots.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
+from .. import obs
 from ..analytics import (bfs, cc, materialize_csr, multilevel_pagerank,
                          multilevel_views, pagerank, scan_stats, sssp)
 from ..core import StoreConfig
 from ..core.concurrent import ConcurrentLSMGraph
 from ..data.graphgen import powerlaw_edges, update_stream
+
+REPORT_SCHEMA = "lsmg-metrics-report-v1"
+
+
+class _MetricsReport:
+    """Accumulates one full registry export per completed phase and keeps
+    the destination current: a FILE is atomically rewritten after every
+    phase (a crash mid-run still leaves a valid report of the phases that
+    finished); '-' prints a one-line digest per phase and the full
+    hierarchical JSON at the end."""
+
+    def __init__(self, dest: str):
+        self.dest = dest
+        self.doc = {"schema": REPORT_SCHEMA, "phases": {}}
+
+    def phase(self, name: str) -> None:
+        snap = obs.export_json(obs.REGISTRY)
+        self.doc["phases"][name] = snap
+        if self.dest == "-":
+            fams = {f: len(m) for f, m in snap["families"].items()}
+            print(f"metrics[{name}]: families={fams}")
+        else:
+            tmp = self.dest + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self.doc, f, indent=1, sort_keys=True)
+            import os
+            os.replace(tmp, self.dest)
+
+    def finish(self) -> None:
+        if self.dest == "-":
+            print(json.dumps(self.doc, indent=1, sort_keys=True))
+        else:
+            print(f"metrics: report written to {self.dest} "
+                  f"({len(self.doc['phases'])} phases)")
+
+
+class _NullReport:
+    def phase(self, name: str) -> None:
+        pass
+
+    def finish(self) -> None:
+        pass
 
 
 def main() -> None:
@@ -48,6 +92,13 @@ def main() -> None:
     ap.add_argument("--wal-sync", default="batch",
                     choices=["always", "batch", "off"],
                     help="WAL fsync policy in --durable mode")
+    ap.add_argument("--metrics", nargs="?", const="-", default=None,
+                    metavar="FILE",
+                    help="dump a hierarchical metrics report (every "
+                         "registered counter/gauge/histogram, grouped by "
+                         "family) after each phase; FILE = rewrite a JSON "
+                         "report there, bare flag = print to stdout at the "
+                         "end")
     ap.add_argument("--chaos", action="store_true",
                     help="fault-injection phase (needs --shards and "
                          "--durable): corrupt one shard's newest segment "
@@ -58,6 +109,7 @@ def main() -> None:
     args = ap.parse_args()
     if args.chaos and not (args.shards > 0 and args.durable):
         ap.error("--chaos requires --shards N and --durable DIR")
+    report = _MetricsReport(args.metrics) if args.metrics else _NullReport()
 
     v = args.vertices
     cfg = StoreConfig(vmax=v, mem_edges=1 << 12, seg_size=8,
@@ -65,7 +117,7 @@ def main() -> None:
                       ovf_cap=1 << 13, batch_cap=1 << 10,
                       l0_run_limit=4, seg_target_edges=1 << 13)
     if args.shards > 0:
-        _run_sharded(args, cfg)
+        _run_sharded(args, cfg, report)
         return
     if args.durable:
         from ..storage import open_store
@@ -78,6 +130,7 @@ def main() -> None:
     n_ops, _, t_ingest = _ingest_stream(g, src, dst, g.flush)
     print(f"ingested {n_ops} ops in {t_ingest:.2f}s "
           f"({n_ops/t_ingest:.0f} ops/s); levels={g.store.level_sizes()}")
+    report.phase("ingest")
 
     snap = g.snapshot()
     t0 = time.time()
@@ -104,19 +157,30 @@ def main() -> None:
             deg, _ = scan_stats(view)
             top = np.argsort(-np.asarray(deg))[:5]
     print(f"{args.analytics} in {time.time()-t0:.2f}s; top: {top}")
+    report.phase("analytics")
     _query_phase(snap, v, args, label="batched reads")
+    report.phase("queries")
     _concurrent_read_phase(g, v, args)
+    report.phase("concurrent_reads")
     print(f"io: {g.store.io}")
     if args.durable:
         # Restart-and-verify: recover the directory and check the edge set
-        # survived WAL replay + manifest-driven segment reload.
+        # survived WAL replay + manifest-driven segment reload.  The
+        # concurrent-read phase ingested more edges after `snap` was
+        # pinned, so re-pin (after draining the ingest queue) or the
+        # verify would diff a stale state against the recovered one.
         from ..storage import open_store
+        g.flush()
+        snap.release()
+        snap = g.snapshot()
         _restart_verify(snap, g, disk=g.store.disk_bytes(),
                         reopen=lambda: open_store(args.durable),
                         where="on disk")
+        report.phase("restart_verify")
     else:
         snap.release()
         g.close()
+    report.finish()
 
 
 # --------------------------------------------------------- shared phases
@@ -241,7 +305,7 @@ def _restart_verify(snap, g, *, disk: int, reopen, where: str) -> None:
         raise SystemExit("restart-and-verify FAILED")
 
 
-def _run_sharded(args, cfg) -> None:
+def _run_sharded(args, cfg, report) -> None:
     """The sharded service tier: routed ingest with per-batch durability
     acks, an epoch-consistent snapshot, gathered batched point-reads, and
     (durable mode) a per-shard restart-and-verify phase."""
@@ -278,6 +342,7 @@ def _run_sharded(args, cfg) -> None:
           f"edges/shard={per_shard}")
     if ack_line:
         print(ack_line)
+    report.phase("ingest")
 
     snap = g.snapshot()
     print(f"epoch={snap.epoch} taus={snap.taus}")
@@ -288,18 +353,23 @@ def _run_sharded(args, cfg) -> None:
     else:
         print(f"({args.analytics} analytics need the single-store CSR "
               "path; skipped in --shards mode)")
+    report.phase("analytics")
     _query_phase(snap, v, args, label="sharded batched reads")
+    report.phase("queries")
     if args.chaos:
         snap.release()
         _chaos_phase(g, v, args)
+        report.phase("chaos")
         snap = g.snapshot()  # re-pin post-heal for restart-and-verify
     if args.durable:
         _restart_verify(snap, g, disk=g.disk_bytes(),
                         reopen=lambda: open_sharded_store(args.durable),
                         where=f"across {args.shards} shard dirs")
+        report.phase("restart_verify")
     else:
         snap.release()
         g.close()
+    report.finish()
 
 
 def _chaos_phase(g, v: int, args) -> None:

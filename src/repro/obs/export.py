@@ -1,0 +1,117 @@
+"""Exporters over a ``MetricRegistry``: hierarchical JSON, prometheus-style
+text, and a periodic reporter thread.
+
+The JSON document is the contract the smoke test and ``graph_service
+--metrics`` validate against:
+
+    {"schema": "lsmg-metrics-v1",
+     "families": {
+       "store": {"flush_seconds": [{"labels": {...}, "type": "histogram",
+                                    "count": 3, "p50": ..., ...}], ...},
+       "io":    {"wal_write_bytes": [{"labels": {...}, "type": "counter",
+                                      "value": 4096}]},
+       ...}}
+
+A metric named ``store_flush_seconds`` files under family ``store`` (the
+first ``_``-separated token — by convention the owning layer) with the
+rest as the in-family key, which is what makes the report hierarchical
+rather than a flat dump."""
+from __future__ import annotations
+
+import json
+import sys
+import threading
+from typing import Callable, Optional, TextIO
+
+from .registry import Counter, Gauge, Histogram, MetricRegistry
+
+SCHEMA = "lsmg-metrics-v1"
+
+
+def _entry(inst) -> dict:
+    e = {"labels": dict(inst.labels), "type": inst.kind}
+    if isinstance(inst, Histogram):
+        e.update(inst.snapshot())
+    else:
+        e["value"] = inst.value
+    return e
+
+
+def export_json(registry: MetricRegistry) -> dict:
+    """Hierarchical snapshot of every registered instrument."""
+    families: dict = {}
+    for inst in registry.collect():
+        family, _, rest = inst.name.partition("_")
+        key = rest or family
+        families.setdefault(family, {}).setdefault(key, []).append(
+            _entry(inst))
+    return {"schema": SCHEMA, "families": families}
+
+
+def _fmt_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + body + "}"
+
+
+def export_prometheus(registry: MetricRegistry) -> str:
+    """Prometheus-style text exposition (counters/gauges as-is; histograms
+    as _count/_sum plus quantile gauges — a summary, not cumulative
+    buckets, which is all our fixed-bucket design needs downstream)."""
+    lines = []
+    seen_types = set()
+    for inst in registry.collect():
+        lab = _fmt_labels(inst.labels)
+        if isinstance(inst, Histogram):
+            if inst.name not in seen_types:
+                lines.append(f"# TYPE {inst.name} summary")
+                seen_types.add(inst.name)
+            snap = inst.snapshot()
+            lines.append(f"{inst.name}_count{lab} {snap['count']}")
+            lines.append(f"{inst.name}_sum{lab} {snap['sum']:.9g}")
+            for q, key in ((0.5, "p50"), (0.99, "p99"), (0.999, "p999")):
+                qlab = dict(inst.labels, quantile=str(q))
+                lines.append(
+                    f"{inst.name}{_fmt_labels(qlab)} {snap[key]:.9g}")
+        else:
+            kind = "counter" if isinstance(inst, Counter) else "gauge"
+            if inst.name not in seen_types:
+                lines.append(f"# TYPE {inst.name} {kind}")
+                seen_types.add(inst.name)
+            lines.append(f"{inst.name}{lab} {inst.value:.9g}"
+                         if isinstance(inst, Gauge)
+                         else f"{inst.name}{lab} {inst.value}")
+    return "\n".join(lines) + "\n"
+
+
+class Reporter:
+    """Daemon thread that periodically hands a fresh JSON export to
+    ``sink`` (default: compact JSON line to stderr).  ``stop()`` joins;
+    a final report is emitted on stop so short runs still see one."""
+
+    def __init__(self, registry: MetricRegistry, interval: float = 10.0,
+                 sink: Optional[Callable[[dict], None]] = None,
+                 stream: Optional[TextIO] = None):
+        self._registry = registry
+        self._interval = interval
+        stream = stream or sys.stderr
+        self._sink = sink or (lambda doc: print(
+            json.dumps(doc, sort_keys=True), file=stream, flush=True))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._loop, name="obs-reporter", daemon=True)
+
+    def start(self) -> "Reporter":
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self._interval):
+            self._sink(export_json(self._registry))
+
+    def stop(self) -> None:
+        if not self._stop.is_set():
+            self._stop.set()
+            self._thread.join()
+            self._sink(export_json(self._registry))

@@ -22,11 +22,13 @@ import json
 import os
 import shutil
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.store import LSMGraph, Snapshot, slice_adjacency
 from ..core.types import StoreConfig
 from ..storage import fsutil
@@ -401,6 +403,20 @@ class ShardedGraphStore:
             max_workers=max_workers or max(
                 1, min(n_shards, os.cpu_count() or 1)),
             thread_name_prefix="shard")
+        # Per-shard observability (label cardinality bounded by n_shards):
+        # fencing state + ack latency + degraded-range gauges, plus the
+        # routed-batch fan-out distribution.  Instruments cached here so
+        # the fan-out hot path never touches the registry map.
+        self._obs_fanout = obs.REGISTRY.histogram(
+            "shard_route_fanout", lo=1.0, hi=1e4)
+        self._obs_fence_total = obs.counter("shard_fence_total")
+        self._obs_fenced = [obs.gauge("shard_fenced", shard=str(s))
+                            for s in range(n_shards)]
+        self._obs_ack = [obs.histogram("shard_ack_seconds", shard=str(s))
+                         for s in range(n_shards)]
+        self._obs_degraded = [
+            obs.gauge("shard_degraded_ranges", shard=str(s))
+            for s in range(n_shards)]
 
     @property
     def n_shards(self) -> int:
@@ -447,6 +463,8 @@ class ShardedGraphStore:
             # the single store's partial-chunk semantics on overflow) but
             # never concurrently in flight.
             seqs = dict(zip(touched, _run_calls(self._pool, calls)))
+        if touched:
+            self._obs_fanout.observe(len(touched))
         return ShardWriteReceipt(
             epoch, {s: q for s, q in seqs.items() if q is not None})
 
@@ -478,6 +496,15 @@ class ShardedGraphStore:
                                 for s, seq in receipt.seqs.items()])
 
     def _ack_one(self, s: int, seq: int) -> None:
+        t0 = time.perf_counter()
+        try:
+            self._ack_one_inner(s, seq)
+        finally:
+            # Failed acks count too: a rising tail here is exactly the
+            # backpressure signal the serving front end will read.
+            self._obs_ack[s].observe(time.perf_counter() - t0)
+
+    def _ack_one_inner(self, s: int, seq: int) -> None:
         try:
             self.shards[s].ack(seq)
         except DurabilityLost as e:
@@ -512,6 +539,8 @@ class ShardedGraphStore:
                 nxt = dict(self._fenced)
                 nxt[int(s)] = f"{type(err).__name__}: {err}"
                 self._fenced = nxt
+                self._obs_fence_total.inc()
+                self._obs_fenced[int(s)].set(1)
 
     def fenced(self) -> Dict[int, str]:
         """Snapshot of the fenced-shard map (shard -> reason); lock-free —
@@ -533,6 +562,7 @@ class ShardedGraphStore:
                 entry["reason"] = fenced[s]
             else:
                 dr = g.degraded_ranges()
+                self._obs_degraded[s].set(len(dr))
                 if dr:
                     entry["status"] = "degraded"
                     entry["degraded"] = [
@@ -568,6 +598,7 @@ class ShardedGraphStore:
                     nxt = dict(self._fenced)
                     nxt.pop(s, None)
                     self._fenced = nxt
+            self._obs_fenced[s].set(0)
             self._epoch += 1
 
     # ------------------------------------------------------------------ reads

@@ -35,8 +35,10 @@ import dataclasses
 import fcntl
 import os
 import threading
+import time
 from typing import Dict, List, Optional, Set, Tuple
 
+from .. import obs
 from ..core.store import LSMGraph
 from ..core.types import RunFile, StoreConfig
 from . import scrub as scrub_mod
@@ -48,6 +50,10 @@ from .wal import WriteAheadLog
 SEGMENT_DIR = "segments"
 WAL_DIR = "wal"
 QUARANTINE_DIR = scrub_mod.QUARANTINE_DIR
+
+_OBS_SEG_WRITE = obs.histogram("storage_segment_write_seconds")
+_OBS_EVICT = obs.counter("storage_segment_evict_total")
+_OBS_QUARANTINE = obs.counter("storage_quarantine_total")
 
 
 class SimulatedCrash(RuntimeError):
@@ -103,6 +109,10 @@ class DurableStorage:
             last_ts_by_seq=wal_last_ts)
         self.manifest = Manifest(root)
         self.store: Optional[LSMGraph] = None
+        # Manifest bytes appended before a store is attached (the "open"
+        # record lands pre-construction) — credited to io.manifest_write at
+        # attach time.
+        self._pending_manifest_bytes = 0
         # Test hook: crash point names at which hooks raise SimulatedCrash
         # ("post_wal_append", "pre_manifest_flush", "pre_manifest_compact").
         self.crash_at: Set[str] = set()
@@ -110,9 +120,28 @@ class DurableStorage:
 
     def attach(self, store: LSMGraph) -> None:
         self.store = store
+        if self._pending_manifest_bytes:
+            store.io.manifest_write += self._pending_manifest_bytes
+            self._pending_manifest_bytes = 0
         if self.scrub_interval is not None and self.scrubber is None:
             self.scrubber = scrub_mod.Scrubber(self, self.scrub_interval)
             self.scrubber.start()
+
+    def _manifest_append(self, rec: dict) -> int:
+        """Single funnel for manifest edits: append + byte accounting (the
+        one durable write ``IOCounters`` didn't count)."""
+        nbytes = self.manifest.append(rec)
+        if self.store is not None:
+            self.store.io.manifest_write += nbytes
+        else:
+            self._pending_manifest_bytes += nbytes
+        return nbytes
+
+    def _write_segment_timed(self, path: str, rf: RunFile) -> int:
+        t0 = time.perf_counter()
+        nbytes = seg_mod.write_segment(path, rf)
+        _OBS_SEG_WRITE.observe(time.perf_counter() - t0)
+        return nbytes
 
     def _crashpoint(self, name: str) -> None:
         if name in self.crash_at:
@@ -167,8 +196,9 @@ class DurableStorage:
                             int(desc["fid"]), reason)
         with self._deg_lock:
             self.degraded[rng.fid] = rng
+        _OBS_QUARANTINE.inc()
         try:
-            self.manifest.append({
+            self._manifest_append({
                 "op": "quarantine", "fid": rng.fid, "reason": reason,
                 "desc": desc,
                 "qfile": os.path.basename(qpath) if qpath else None})
@@ -185,7 +215,7 @@ class DurableStorage:
 
     def mark_rebuilt(self, desc: dict) -> None:
         """Publish a successful rebuild: the fid is live again."""
-        self.manifest.append({"op": "rebuild", "add": [desc]})
+        self._manifest_append({"op": "rebuild", "add": [desc]})
         with self._deg_lock:
             self.degraded.pop(int(desc["fid"]), None)
         if self.store is not None:
@@ -228,14 +258,14 @@ class DurableStorage:
     def on_flush_commit(self, rf: RunFile, wal_floor: int) -> None:
         """The L0 run is built and published in memory: make it durable."""
         path = self.seg_path(rf.fid)
-        nbytes = seg_mod.write_segment(path, rf)
+        nbytes = self._write_segment_timed(path, rf)
         desc = self._segdesc(rf, wal_seq=self._pending_wal_seq)
         rf.path = path
         rf.loader = self.make_loader(path, desc)
         self.seg_descs[rf.fid] = desc
         self.store.io.segment_write += nbytes
         self._crashpoint("pre_manifest_flush")
-        self.manifest.append({
+        self._manifest_append({
             "op": "flush", "tau": wal_floor, "wal_floor": wal_floor,
             "next_fid": self.store._next_fid, "add": [desc],
         })
@@ -246,7 +276,7 @@ class DurableStorage:
         crash until the manifest edit lands; recovery GCs them."""
         for rf in new_segs:
             path = self.seg_path(rf.fid)
-            nbytes = seg_mod.write_segment(path, rf)
+            nbytes = self._write_segment_timed(path, rf)
             desc = self._segdesc(rf)
             rf.path = path
             rf.loader = self.make_loader(path, desc)
@@ -258,7 +288,7 @@ class DurableStorage:
         """In-memory metadata swap done: publish the edit, then drop the
         replaced files (the manifest no longer references them)."""
         self._crashpoint("pre_manifest_compact")
-        self.manifest.append({
+        self._manifest_append({
             "op": "compact", "tau": self.store.tau, "level": target_level,
             "next_fid": self.store._next_fid,
             "remove": sorted(rf.fid for rf in removed_runs),
@@ -309,6 +339,7 @@ class DurableStorage:
             for rf in lvl:
                 n += bool(rf.evict())
         if n:
+            _OBS_EVICT.inc(n)
             self.store.drop_read_spine()
         return n
 
@@ -320,6 +351,7 @@ class DurableStorage:
             for rf in lvl:
                 n += bool(rf.evict())
         if n:
+            _OBS_EVICT.inc(n)
             self.store.drop_read_spine()
         return n
 
@@ -348,6 +380,10 @@ class DurableStorage:
                 self._scrub_heal(rf, e, stats)
             except OSError:
                 stats["transient"] += 1  # next cadence retries
+        for verdict, n in stats.items():
+            if n:
+                obs.counter("storage_scrub_verdict_total",
+                            verdict=verdict).inc(n)
         return stats
 
     def _scrub_heal(self, rf: RunFile, err: CorruptionError,
@@ -355,7 +391,8 @@ class DurableStorage:
         if rf.arrays is not None:
             # The good bytes are still resident: rewrite in place (atomic
             # tmp+replace), no quarantine needed.
-            self.store.io.segment_write += seg_mod.write_segment(rf.path, rf)
+            self.store.io.segment_write += self._write_segment_timed(
+                rf.path, rf)
             stats["healed_resident"] += 1
             return
         desc = self.seg_descs.get(rf.fid)
@@ -419,7 +456,7 @@ def open_store(root: str, cfg: Optional[StoreConfig] = None, *,
                              wal_sync_interval=wal_sync_interval,
                              wal_retain=wal_retain, on_corruption=on_corruption,
                              scrub_interval=scrub_interval)
-    storage.manifest.append({
+    storage._manifest_append({
         "op": "open", "format": 1, "config": dataclasses.asdict(cfg)})
     store = LSMGraph(cfg, durability=storage)
     return store

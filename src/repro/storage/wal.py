@@ -19,14 +19,25 @@ from __future__ import annotations
 import os
 import struct
 import threading
+import time
 import zlib
 from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from . import faultfs
 from .errors import DurabilityLost
 from .fsutil import fsync_dir
+
+# WAL instruments (module-level: WALs are per-store but short-lived across
+# reopens; per-instance labels would grow unbounded over restarts).
+_OBS_APPEND = obs.histogram("storage_wal_append_seconds")
+_OBS_FSYNC = obs.histogram("storage_wal_fsync_seconds")
+# Group-commit batch size: appends covered per fsync (lo=1: a size, not a
+# latency).
+_OBS_BATCH = obs.REGISTRY.histogram(
+    "storage_wal_group_commit_batch", lo=1.0, hi=1e6)
 
 
 class WalAppend(NamedTuple):
@@ -193,6 +204,7 @@ class WriteAheadLog:
         """Shared framed-append core: seq allocation, fail-stop check, and
         the per-policy fsync — one implementation for every record type so
         the commit-seq / fsyncgate protocol cannot desynchronize."""
+        t0 = time.perf_counter()
         with self._io_lock:
             self._check_failed()
             try:
@@ -212,8 +224,10 @@ class WriteAheadLog:
             if self.sync_mode == "always":
                 self._fsync_latched(self._fd)
                 self._durable_seq = seq
+                _OBS_BATCH.observe(1)
             elif self.sync_mode == "batch":
                 self._dirty.set()
+        _OBS_APPEND.observe(time.perf_counter() - t0)
         return WalAppend(seq, len(rec))
 
     def append_edges(self, src, dst, ts, marker, prop) -> WalAppend:
@@ -249,7 +263,9 @@ class WriteAheadLog:
                 fd = os.dup(self._fd)
                 path = self._path
                 upto = self._appended_seq  # every seq <= upto is in the file
+                batch = upto - self._durable_seq  # appends this commit covers
                 self._dirty.clear()
+            t0 = time.perf_counter()
             try:
                 faultfs.fsync(fd, path)
             except OSError:
@@ -263,6 +279,9 @@ class WriteAheadLog:
                 raise
             finally:
                 os.close(fd)
+            _OBS_FSYNC.observe(time.perf_counter() - t0)
+            if batch > 0:
+                _OBS_BATCH.observe(batch)
             with self._io_lock:
                 self._durable_seq = max(self._durable_seq, upto)
 
