@@ -1,7 +1,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 tier1-shard test bench bench-smoke chaos-smoke obs-smoke lint-locks
+.PHONY: tier1 tier1-shard test bench bench-smoke bench-trajectory \
+        bench-trajectory-smoke bench-compare chaos-smoke obs-smoke \
+        lint-locks
 
 # Fast verification gate: everything except the `slow`-marked end-to-end
 # tests (test_distributed.py spawns an 8-device subprocess mesh,
@@ -25,6 +27,25 @@ bench:
 # asserts exit 0 + the name,us_per_call,derived row schema (JSON report).
 bench-smoke:
 	BENCH_SMOKE=1 $(PY) -m benchmarks.smoke
+
+# Persisted perf trajectory: run every suite at the pinned scale plus the
+# amplification probe and write BENCH_PR$(PR).json at the repo root (the
+# file each PR commits; see benchmarks/trajectory.py).
+PR ?= 9
+bench-trajectory:
+	$(PY) -m benchmarks.trajectory --pr $(PR)
+
+# Diff two trajectory files; non-zero exit on >threshold regression.
+# Usage: make bench-compare BASE=BENCH_PR8.json CAND=BENCH_PR9.json
+BASE ?= BENCH_PR$(PR).json
+CAND ?= BENCH_PR$(PR).json
+bench-compare:
+	$(PY) tools/bench_compare.py $(BASE) $(CAND)
+
+# CI gate for the trajectory pipeline: tiny-scale run, schema validation,
+# and a bench_compare round-trip (identical passes, inflated copy fails).
+bench-trajectory-smoke:
+	$(PY) tools/bench_trajectory_smoke.py
 
 # Fault-injection gate: a fixed-seed batch of randomized fault schedules
 # (failed fsyncs, torn WAL writes, read EIO, segment bit-flips) through the

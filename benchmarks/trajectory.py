@@ -1,0 +1,193 @@
+"""Persisted benchmark trajectory: every suite + amplification, one file.
+
+``make bench-trajectory`` (``python -m benchmarks.trajectory --pr N``)
+runs every registered suite from ``benchmarks.run.suites()`` at a pinned
+scale, runs a deterministic amplification probe (one durable + one
+in-memory store through ingest → flush → compact → batched reads), and
+merges the CSV rows, both ``lsmg-amp-v1`` reports, and every populated
+registry histogram's percentiles into a single ``BENCH_PR<N>.json`` at
+the repo root — the repo's perf trajectory.  Each PR commits its file;
+``tools/bench_compare.py`` diffs two of them and fails on regression
+past configurable thresholds, so a PR can PROVE it didn't regress the
+previous one instead of asserting it.
+
+Schema (``lsmg-bench-trajectory-v1``)::
+
+    {"schema": "lsmg-bench-trajectory-v1", "pr": N,
+     "scale": {"V":..., "E":..., "smoke": bool, "scale": int},
+     "suites": {"<row name>": {"us_per_call": f, "derived": "..."}},
+     "suite_status": [{"suite":..., "ok":..., "rows":..., "seconds":...}],
+     "amplification": {"durable": <lsmg-amp-v1>, "memory": <lsmg-amp-v1>},
+     "percentiles": {"<name>{labels}": {"count":..., "p50":..., "p99":...}}}
+
+``BENCH_SMOKE=1`` shrinks it to the CI gate scale (numbers meaningless;
+schema and exit status are the contract — ``tools/
+bench_trajectory_smoke.py``).  Row names are the harness's
+``name,us_per_call,derived`` names, unique across suites by contract; a
+collision gets a ``#k`` suffix rather than silently overwriting.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import io
+import json
+import math
+import os
+import re
+import sys
+import tempfile
+import time
+import traceback
+
+SCHEMA = "lsmg-bench-trajectory-v1"
+
+_ROW = re.compile(r"^(?P<name>[\w./\-]+),(?P<us>-?[\d.eE+\-]+),"
+                  r"(?P<derived>.*)$")
+
+
+def _run_suites() -> tuple:
+    """Run every registered suite, capturing rows.  Returns
+    (rows: {name: {us_per_call, derived}}, status: [per-suite entries],
+    failures: int)."""
+    from .run import suites
+    rows: dict = {}
+    status = []
+    failures = 0
+    for label, fn in suites():
+        entry = {"suite": label, "ok": True, "rows": 0, "seconds": 0.0}
+        buf = io.StringIO()
+        t0 = time.time()
+        try:
+            with contextlib.redirect_stdout(buf):
+                fn()
+        except Exception:
+            entry["ok"] = False
+            entry["error"] = traceback.format_exc(limit=4)
+            failures += 1
+        entry["seconds"] = round(time.time() - t0, 2)
+        n = 0
+        for line in buf.getvalue().splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            m = _ROW.match(line)
+            if not m:
+                entry.setdefault("bad_rows", []).append(line)
+                continue
+            us = float(m.group("us"))
+            if not math.isfinite(us):
+                entry.setdefault("bad_rows", []).append(line)
+                continue
+            name = m.group("name")
+            if name in rows:                       # collision: keep both
+                k = 2
+                while f"{name}#{k}" in rows:
+                    k += 1
+                name = f"{name}#{k}"
+            rows[name] = {"us_per_call": us, "derived": m.group("derived")}
+            n += 1
+        entry["rows"] = n
+        if entry["ok"] and (n == 0 or entry.get("bad_rows")):
+            entry["ok"] = False
+            failures += 1
+        status.append(entry)
+        print(f"# trajectory: {label}: {n} rows in "
+              f"{entry['seconds']}s{'' if entry['ok'] else ' (FAILED)'}",
+              file=sys.stderr)
+    return rows, status, failures
+
+
+def _amp_probe() -> dict:
+    """Deterministic amplification scenario: the SAME mixed workload
+    against a durable store (physical-byte ledger) and an in-memory one
+    (logical-movement ledger), so trajectory files compare amplification
+    like-for-like across PRs."""
+    import numpy as np
+
+    from repro import obs
+    from repro.storage import open_store
+
+    from .common import SMOKE, store_cfg
+
+    n_batches, batch = (4, 512) if SMOKE else (12, 2048)
+    out = {}
+    for mode in ("durable", "memory"):
+        with tempfile.TemporaryDirectory(prefix="amp_probe_") as td:
+            if mode == "durable":
+                g = open_store(os.path.join(td, "db"), store_cfg(),
+                               wal_sync="batch")
+            else:
+                from repro.core import LSMGraph
+                g = LSMGraph(store_cfg())
+            rng = np.random.default_rng(7)
+            v = store_cfg().vmax
+            for i in range(n_batches):
+                s = rng.integers(0, v, batch).astype(np.int64)
+                d = rng.integers(0, v, batch).astype(np.int64)
+                g.insert_edges(s, d)
+                if i % 3 == 2:
+                    g.flush_memgraph()
+            g.flush_memgraph()
+            g.compact_l0()
+            with g.snapshot() as snap:
+                snap.neighbors_batch(np.arange(0, v, 2, dtype=np.int64))
+            led = obs.AmplificationLedger(g)
+            out[mode] = led.report(exact_space=True)
+            g.close()
+    return out
+
+
+def _percentiles() -> dict:
+    """Every populated histogram's count/p50/p99 — the latency side of the
+    trajectory (resolve, flush, compaction, WAL fsync...)."""
+    from repro import obs
+    out = {}
+    for inst in obs.REGISTRY.collect():
+        if not isinstance(inst, obs.Histogram):
+            continue
+        snap = inst.snapshot()
+        if not snap["count"]:
+            continue
+        lab = ",".join(f"{k}={v}" for k, v in sorted(inst.labels.items()))
+        key = inst.name + (f"{{{lab}}}" if lab else "")
+        out[key] = {"count": snap["count"],
+                    "p50": snap["p50"], "p99": snap["p99"]}
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pr", type=int, required=True,
+                    help="PR ordinal: output defaults to BENCH_PR<N>.json")
+    ap.add_argument("--out", default=None, metavar="FILE")
+    args = ap.parse_args()
+    out_path = args.out or f"BENCH_PR{args.pr}.json"
+
+    from .common import E, SCALE, SMOKE, V
+    t0 = time.time()
+    rows, status, failures = _run_suites()
+    amp = _amp_probe()
+    doc = {
+        "schema": SCHEMA,
+        "pr": args.pr,
+        "scale": {"V": V, "E": E, "smoke": SMOKE, "scale": SCALE},
+        "suites": rows,
+        "suite_status": status,
+        "amplification": amp,
+        "percentiles": _percentiles(),
+    }
+    tmp = out_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, out_path)
+    print(f"# trajectory: {len(rows)} rows, "
+          f"{len(doc['percentiles'])} histograms, "
+          f"{failures} failed suites -> {out_path} "
+          f"in {time.time()-t0:.0f}s", file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -362,11 +362,24 @@ class LSMGraph:
                                           store=self.obs_label)
         self._obs_publish = obs.counter("store_state_publish_total",
                                         store=self.obs_label)
-        self._obs_l0_depth = obs.gauge("store_l0_depth",
-                                       store=self.obs_label)
-        self._obs_level_runs = tuple(
-            obs.gauge("store_level_runs", store=self.obs_label, level=str(i))
-            for i in range(cfg.n_levels))
+        # NOTE: the L0-depth / runs-per-level GAUGES are deliberately not
+        # cached — empty levels get their series removed at commit time
+        # (see _obs_update_level_gauges), and a cached reference would keep
+        # writing to an orphaned instrument the exporters no longer see.
+        # Amplification-ledger feeders (obs.amplification): logical ingest
+        # volume and read-path work, all plain counters on the hot path.
+        self._obs_ingest_bytes = obs.counter("store_logical_ingest_bytes",
+                                             store=self.obs_label)
+        self._obs_edges_ins = obs.counter("store_edges_inserted_total",
+                                          store=self.obs_label)
+        self._obs_edges_del = obs.counter("store_edges_deleted_total",
+                                          store=self.obs_label)
+        self._obs_read_queries = obs.counter("read_queries_total",
+                                             store=self.obs_label)
+        self._obs_read_probes = obs.counter("read_runs_probed_total",
+                                            store=self.obs_label)
+        self._obs_read_returned = obs.counter("read_returned_bytes",
+                                              store=self.obs_label)
         self.on_flush_needed = None  # callback for the concurrent wrapper
         self._ts = 0
         self._next_fid = 0
@@ -435,10 +448,26 @@ class LSMGraph:
                                  ) -> None:
         """Refresh the L0-depth / runs-per-level gauges after a membership
         commit (flush, compaction, recovery, empty-run drop).  Off the
-        commit lock: callers pass the levels tuple they just published."""
-        self._obs_l0_depth.set(len(levels[0]))
-        for g, lvl in zip(self._obs_level_runs, levels):
-            g.set(len(lvl))
+        commit lock: callers pass the levels tuple they just published.
+
+        A level that just emptied gets its series REMOVED, not set to 0:
+        a full compaction that drains L0 (or annihilates a whole level)
+        would otherwise leave the dead series in every export forever.
+        Cold path (one commit per flush/compaction), so gauges are
+        get-or-created here instead of cached at construction."""
+        reg = obs.REGISTRY
+        if levels[0]:
+            obs.gauge("store_l0_depth", store=self.obs_label).set(
+                len(levels[0]))
+        else:
+            reg.remove("store_l0_depth", store=self.obs_label)
+        for i, lvl in enumerate(levels):
+            if lvl:
+                obs.gauge("store_level_runs", store=self.obs_label,
+                          level=str(i)).set(len(lvl))
+            else:
+                reg.remove("store_level_runs", store=self.obs_label,
+                           level=str(i))
 
     def note_health_change(self) -> None:
         """Republish after a quarantine or heal: the next state carries the
@@ -547,6 +576,10 @@ class LSMGraph:
                     # commit keeps the tau of the content it carries.
                     self._swap_state(mem=new_mem, tau=self._ts)
             self._obs_apply.observe(time.perf_counter() - t_chunk)
+            # Amplification-ledger denominator: logical bytes the caller
+            # handed us (20 B/edge record), counted once per accepted chunk.
+            self._obs_ingest_bytes.inc(n * (BYTES_PER_EDGE + BYTES_PER_PROP))
+            (self._obs_edges_del if delete else self._obs_edges_ins).inc(n)
             if allow_flush and mg_mod.memgraph_should_flush(
                     self._state.mem, self.cfg):
                 self.flush_memgraph()
@@ -595,6 +628,10 @@ class LSMGraph:
                         "MemGraph overflow during WAL replay — raise mem caps")
                 with self._lock:
                     self._swap_state(mem=new_mem, tau=self._ts)
+            n, nd = len(s), int(np.count_nonzero(m))
+            self._obs_ingest_bytes.inc(n * (BYTES_PER_EDGE + BYTES_PER_PROP))
+            self._obs_edges_del.inc(nd)
+            self._obs_edges_ins.inc(n - nd)
             if mg_mod.memgraph_should_flush(self._state.mem, self.cfg):
                 self.flush_memgraph()
 
@@ -646,6 +683,8 @@ class LSMGraph:
                         mem_full = st.mem
                     if self.durability is not None:
                         self.durability.on_flush_rotate(wal_floor)
+                obs.REGISTRY.trace_instant("store_flush_rotate",
+                                           store=self.obs_label)
                 src, dst, ts, marker, prop, n = mg_mod.flush_arrays(mem_full)
                 cap = csr.quantize_cap(int(n))
                 run = csr.build_run_arrays(src, dst, ts, marker, prop, n,
@@ -660,6 +699,10 @@ class LSMGraph:
                     jnp.asarray(rf.fid, jnp.int32))
                 self.io.flush_write += rf.nbytes
                 self.io.index_write += int(run.nv) * 8
+                # Per-level write-amp numerator (logical movement; durable
+                # stores also get the physical mirror in _write_segment).
+                obs.counter("store_level_write_bytes", store=self.obs_label,
+                            level="0").inc(rf.nbytes)
                 new_runs = dict(self._state.runs_by_fid)
                 new_runs[rf.fid] = rf
                 deg = self.degraded_ranges()
@@ -678,6 +721,9 @@ class LSMGraph:
                     need_compact = (len(new_levels[0])
                                     >= self.cfg.l0_run_limit)
                 self._obs_update_level_gauges(new_levels)
+                obs.REGISTRY.trace_instant("store_flush_commit",
+                                           store=self.obs_label,
+                                           fid=str(rf.fid))
                 if self.durability is not None:
                     # Segment write + manifest flush-edit + WAL prune.  On
                     # crash before the manifest edit lands the WAL tail
@@ -794,6 +840,9 @@ class LSMGraph:
                                 is_bottom=is_bottom)
         new_segs = self._resegment(merged, target_level)
         self.io.compaction_write += sum(r.nbytes for r in new_segs)
+        obs.counter("store_level_write_bytes", store=self.obs_label,
+                    level=str(target_level)).inc(
+            sum(r.nbytes for r in new_segs))
         if self.durability is not None:
             # Write the merge outputs while no lock is held; they stay
             # invisible (orphans) until the manifest edit below lands.
@@ -912,6 +961,10 @@ class LSMGraph:
                              runs_by_fid=new_runs, version=version,
                              degraded=deg, spine=_SpineHandle())
         self._obs_update_level_gauges(new_levels)
+        obs.REGISTRY.trace_instant("store_compact_commit",
+                                   store=self.obs_label,
+                                   level=str(target_level),
+                                   segs=str(len(new_segs)))
 
     def _resegment(self, merged: csr.CSRRunArrays, level: int) -> List[RunFile]:
         """Split a merged run into segment files at vertex boundaries,
@@ -1303,7 +1356,17 @@ class Snapshot:
         ``read_resolve_seconds`` histogram."""
         t0 = time.perf_counter()
         out = self._resolve_batch_impl(u, pad_to)
-        self._store._obs_resolve.observe(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self._store._obs_resolve.observe(dt)
+        self._store._obs_read_queries.inc(len(u))
+        ring = obs.REGISTRY.trace_ring  # one check; None = tracing off
+        if ring is not None:
+            ring.append({"name": "read_resolve",
+                         "labels": {"store": self._store.obs_label,
+                                    "queries": str(len(u))},
+                         "t0": t0, "dur": dt, "depth": 0,
+                         "thread": threading.current_thread().name,
+                         "ok": True})
         return out
 
     def _resolve_batch_impl(self, u: np.ndarray,
@@ -1339,6 +1402,10 @@ class Snapshot:
         bb = self._get_backbone()
         mem = self.state.mem
         have_mem = int(mem.ne) != 0
+        # Read-amp accounting: sorted sources this batch consults (spine
+        # runs + the active MemGraph tier).  Batch-amortized — divide by
+        # read_queries_total for the per-query figure.
+        self._store._obs_read_probes.inc(len(bb.runs) + int(have_mem))
         if bb.src.shape[0] == 0 and not have_mem:
             return (np.zeros(B + 1, np.int64), np.empty(0, np.int64),
                     np.empty(0, np.float32))
@@ -1417,6 +1484,7 @@ class Snapshot:
                     if rf.nv == 0 or rf.max_vid < lo_q or rf.min_vid > hi_q:
                         continue
                     runs.append((rf, None))
+        self._store._obs_read_probes.inc(len(runs) + len(mems))
         if not mems and not runs:
             return (np.zeros(B + 1, np.int64), np.empty(0, np.int64),
                     np.empty(0, np.float32))
@@ -1436,6 +1504,8 @@ class Snapshot:
         ql = _np(qid)[live]
         dl = dst_np[live].astype(np.int64)
         pl = prop_np[live].astype(np.float32)
+        self._store._obs_read_returned.inc(
+            len(dl) * (BYTES_PER_EDGE + BYTES_PER_PROP))
         offs = np.searchsorted(ql, np.arange(B + 1))
         return offs, dl, pl
 
@@ -1453,6 +1523,8 @@ class Snapshot:
         pl = np.concatenate([p[2] for p in parts]).astype(np.float32)
         order = np.lexsort((dl, ql))
         ql, dl, pl = ql[order], dl[order], pl[order]
+        self._store._obs_read_returned.inc(
+            len(dl) * (BYTES_PER_EDGE + BYTES_PER_PROP))
         offs = np.searchsorted(ql, np.arange(B + 1))
         return offs, dl, pl
 
@@ -1537,7 +1609,13 @@ class Snapshot:
                         bytes_read += len(r[0]) * (
                             BYTES_PER_EDGE + BYTES_PER_PROP)
         self._store.io.analytics_read += bytes_read
-        return _annihilate(recs, self.tau, return_props)
+        self._store._obs_read_queries.inc(1)
+        self._store._obs_read_probes.inc(len(recs))
+        out = _annihilate(recs, self.tau, return_props)
+        self._store._obs_read_returned.inc(
+            len(out[0] if return_props else out)
+            * (BYTES_PER_EDGE + BYTES_PER_PROP))
+        return out
 
     def query_edges_batch(self, us, vs) -> np.ndarray:
         """Batched edge-membership: bool[i] = (us[i] -> vs[i]) is live at τ.

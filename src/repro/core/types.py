@@ -112,6 +112,9 @@ class RunFile:
     _OBS_MISS = obs.counter("read_prefetch_miss_total")
     _OBS_SCHED = obs.counter("read_prefetch_scheduled_total")
     _OBS_LOAD = obs.histogram("storage_segment_load_seconds")
+    # Read-amp context for the amplification ledger: bytes materialized by
+    # cold segment loads (process-wide — RunFiles outlive store labels).
+    _OBS_COLD_BYTES = obs.counter("read_cold_load_bytes")
 
     def ensure_loaded(self, _retry_counter: str = "read_retries"
                       ) -> CSRRunArrays:
@@ -136,6 +139,7 @@ class RunFile:
                     raise RuntimeError(
                         f"RunFile fid={self.fid} has no arrays and no loader")
                 self._OBS_MISS.inc()
+                self._OBS_COLD_BYTES.inc(self.nbytes)
                 t0 = time.perf_counter()
                 a = self._load_with_retry(_retry_counter)
                 self._OBS_LOAD.observe(time.perf_counter() - t0)

@@ -34,8 +34,13 @@ class _MetricsReport:
     def __init__(self, dest: str):
         self.dest = dest
         self.doc = {"schema": REPORT_SCHEMA, "phases": {}}
+        # Derived-metric refreshers (amplification ledgers): run before
+        # every export so each phase report carries current ratios.
+        self.refresh = []
 
     def phase(self, name: str) -> None:
+        for cb in self.refresh:
+            cb()
         snap = obs.export_json(obs.REGISTRY)
         self.doc["phases"][name] = snap
         if self.dest == "-":
@@ -57,6 +62,9 @@ class _MetricsReport:
 
 
 class _NullReport:
+    def __init__(self):
+        self.refresh = []
+
     def phase(self, name: str) -> None:
         pass
 
@@ -99,6 +107,12 @@ def main() -> None:
                          "family) after each phase; FILE = rewrite a JSON "
                          "report there, bare flag = print to stdout at the "
                          "end")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record the span trace ring for the whole run and "
+                         "write it as Chrome trace-event / Perfetto JSON "
+                         "to FILE at exit (open at ui.perfetto.dev): "
+                         "flush/compaction/resolve spans plus lifecycle "
+                         "instants (rotate, commit, quarantine, fence)")
     ap.add_argument("--chaos", action="store_true",
                     help="fault-injection phase (needs --shards and "
                          "--durable): corrupt one shard's newest segment "
@@ -110,6 +124,8 @@ def main() -> None:
     if args.chaos and not (args.shards > 0 and args.durable):
         ap.error("--chaos requires --shards N and --durable DIR")
     report = _MetricsReport(args.metrics) if args.metrics else _NullReport()
+    if args.trace:
+        obs.REGISTRY.enable_tracing(capacity=65536)
 
     v = args.vertices
     cfg = StoreConfig(vmax=v, mem_edges=1 << 12, seg_size=8,
@@ -118,6 +134,7 @@ def main() -> None:
                       l0_run_limit=4, seg_target_edges=1 << 13)
     if args.shards > 0:
         _run_sharded(args, cfg, report)
+        _write_trace(args)
         return
     if args.durable:
         from ..storage import open_store
@@ -125,6 +142,7 @@ def main() -> None:
             store=open_store(args.durable, cfg, wal_sync=args.wal_sync))
     else:
         g = ConcurrentLSMGraph(cfg)
+    report.refresh.append(obs.AmplificationLedger(g.store).refresh_gauges)
     src, dst = powerlaw_edges(v, args.edges, seed=args.seed)
 
     n_ops, _, t_ingest = _ingest_stream(g, src, dst, g.flush)
@@ -181,6 +199,15 @@ def main() -> None:
         snap.release()
         g.close()
     report.finish()
+    _write_trace(args)
+
+
+def _write_trace(args) -> None:
+    if not args.trace:
+        return
+    n = obs.export_chrome_trace(args.trace, obs.REGISTRY)
+    print(f"trace: {n} events written to {args.trace} "
+          "(Chrome trace-event JSON; open at ui.perfetto.dev)")
 
 
 # --------------------------------------------------------- shared phases
@@ -317,6 +344,10 @@ def _run_sharded(args, cfg, report) -> None:
                                wal_sync=args.wal_sync)
     else:
         g = ShardedGraphStore(cfg, args.shards)
+    # Closure over g.shards (not the ledgers): reopen_shard swaps stores,
+    # and a fresh ledger per refresh always tracks the live set.
+    report.refresh.append(lambda: [
+        obs.AmplificationLedger(sh).refresh_gauges() for sh in g.shards])
     src, dst = powerlaw_edges(v, args.edges, seed=args.seed)
 
     t0 = time.time()

@@ -36,6 +36,39 @@ layer's instruments:
   kept byte-compatible with the legacy dataclass API.
 * ``merge_*``  — the ``MERGE_STATS`` view (kernels/merge.py): kernel-vs-
   host merge branch counts, spine build/splice/reuse.
+* ``amp_*``    — derived amplification gauges (obs/amplification.py):
+  written ONLY by ``AmplificationLedger.refresh_gauges`` — never by a
+  hot path.
+
+**Derived metrics (amplification).**  ``obs/amplification.py`` turns raw
+counters into the paper's evaluation ratios: write amplification
+(physical WAL + segment + manifest bytes ÷ ``store_logical_ingest_bytes``,
+overall and per level via ``storage_level_write_bytes``; in-memory
+stores use the flush/compaction/index logical proxy), read amplification
+(``io_analytics_read_bytes`` touched ÷ ``read_returned_bytes``, plus
+``read_runs_probed_total``/``read_queries_total`` runs-per-query), and
+space amplification (``disk_bytes()`` ÷ live edge bytes).  Rules for
+ratio gauges: family ``amp``, suffix ``_ratio`` (the one sanctioned
+unit-less suffix — a ratio IS the unit), runs-per-query gauges carry no
+suffix; values are REFRESHED from counters (``refresh_gauges``, hooked
+into ``Reporter``), never incremented; an empty-denominator series is
+REMOVED (``MetricRegistry.remove``), not set to 0 — "no data" must not
+export as "no amplification".  The JSON report form is schema
+``lsmg-amp-v1`` (``AmplificationLedger.report``).
+
+**Dead series.**  A gauge whose subject disappears (a level emptied by a
+full compaction, a ratio losing its denominator) is removed via
+``MetricRegistry.remove`` at the owning commit point, so exporters stop
+reporting it; stale last values never outlive their subject.
+
+**Trace export.**  With tracing enabled (``REGISTRY.enable_tracing``),
+spans land in the bounded ring together with point lifecycle events
+(``trace_instant``: flush rotate/commit, compaction commit, WAL rotate,
+quarantine, rebuild, shard fence).  ``obs/trace_export.py`` converts the
+ring to Chrome trace-event / Perfetto JSON (spans → ``ph:"X"`` duration
+events per thread, instants → ``ph:"i"`` markers, families → ``cat``,
+failed spans carry ``args.ok: false``); ``graph_service --trace FILE``
+writes it at exit.
 
 **Label cardinality.**  Labels multiply series; every label must be
 bounded by configuration, never by data.  Allowed: store ordinal
@@ -57,6 +90,13 @@ from .export import SCHEMA, Reporter, export_json, export_prometheus
 #: The process-wide default registry every production call site uses.
 REGISTRY = MetricRegistry()
 
+# Derived layers import lazily-resolved REGISTRY, so they must come after
+# its definition.
+from .amplification import (AMP_SCHEMA, AmplificationLedger,  # noqa: E402
+                            shard_amplification)
+from .trace_export import (export_chrome_trace,               # noqa: E402
+                           to_chrome_trace)
+
 
 def counter(name: str, **labels) -> Counter:
     return REGISTRY.counter(name, **labels)
@@ -75,7 +115,9 @@ def span(name: str, **labels) -> Span:
 
 
 __all__ = [
-    "REGISTRY", "SCHEMA", "MetricRegistry", "Counter", "Gauge",
-    "Histogram", "Span", "Reporter", "export_json", "export_prometheus",
+    "REGISTRY", "SCHEMA", "AMP_SCHEMA", "MetricRegistry", "Counter",
+    "Gauge", "Histogram", "Span", "Reporter", "AmplificationLedger",
+    "export_json", "export_prometheus", "export_chrome_trace",
+    "to_chrome_trace", "shard_amplification",
     "counter", "gauge", "histogram", "span",
 ]

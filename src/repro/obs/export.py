@@ -21,7 +21,7 @@ from __future__ import annotations
 import json
 import sys
 import threading
-from typing import Callable, Optional, TextIO
+from typing import Callable, Optional, Sequence, TextIO
 
 from .registry import Counter, Gauge, Histogram, MetricRegistry
 
@@ -48,21 +48,43 @@ def export_json(registry: MetricRegistry) -> dict:
     return {"schema": SCHEMA, "families": families}
 
 
+def _escape_label_value(v: str) -> str:
+    """Label-value escaping per the Prometheus text exposition format:
+    backslash, double-quote, and line-feed must be escaped or a hostile
+    value (a path, an error string) breaks the whole scrape."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _escape_help(text: str) -> str:
+    """HELP-text escaping: backslash and line-feed only (quotes are legal
+    in HELP lines)."""
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _fmt_labels(labels: dict) -> str:
     if not labels:
         return ""
-    body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    body = ",".join(f'{k}="{_escape_label_value(v)}"'
+                    for k, v in sorted(labels.items()))
     return "{" + body + "}"
 
 
-def export_prometheus(registry: MetricRegistry) -> str:
+def export_prometheus(registry: MetricRegistry,
+                      help_text: Optional[dict] = None) -> str:
     """Prometheus-style text exposition (counters/gauges as-is; histograms
     as _count/_sum plus quantile gauges — a summary, not cumulative
-    buckets, which is all our fixed-bucket design needs downstream)."""
+    buckets, which is all our fixed-bucket design needs downstream).
+    ``help_text`` optionally maps metric name -> HELP line; label values
+    and HELP text are escaped per the exposition format."""
     lines = []
     seen_types = set()
+    help_text = help_text or {}
     for inst in registry.collect():
         lab = _fmt_labels(inst.labels)
+        if inst.name not in seen_types and inst.name in help_text:
+            lines.append(
+                f"# HELP {inst.name} {_escape_help(help_text[inst.name])}")
         if isinstance(inst, Histogram):
             if inst.name not in seen_types:
                 lines.append(f"# TYPE {inst.name} summary")
@@ -88,19 +110,42 @@ def export_prometheus(registry: MetricRegistry) -> str:
 class Reporter:
     """Daemon thread that periodically hands a fresh JSON export to
     ``sink`` (default: compact JSON line to stderr).  ``stop()`` joins;
-    a final report is emitted on stop so short runs still see one."""
+    a final report is emitted on stop so short runs still see one.
+
+    ``refresh`` callbacks run before every export — the hook derived-
+    metric ledgers (``obs.amplification``) use to recompute their ratio
+    gauges from the raw counters, so every emitted report carries current
+    amplification numbers without the hot paths ever computing a ratio.
+    A refresh callback that raises is dropped from subsequent rounds
+    (reported once to stderr) rather than killing the reporter."""
 
     def __init__(self, registry: MetricRegistry, interval: float = 10.0,
                  sink: Optional[Callable[[dict], None]] = None,
-                 stream: Optional[TextIO] = None):
+                 stream: Optional[TextIO] = None,
+                 refresh: Optional[Sequence[Callable[[], None]]] = None):
         self._registry = registry
         self._interval = interval
         stream = stream or sys.stderr
         self._sink = sink or (lambda doc: print(
             json.dumps(doc, sort_keys=True), file=stream, flush=True))
+        self._refresh = list(refresh or [])
         self._stop = threading.Event()
         self._thread = threading.Thread(
             target=self._loop, name="obs-reporter", daemon=True)
+
+    def add_refresh(self, cb: Callable[[], None]) -> "Reporter":
+        self._refresh.append(cb)
+        return self
+
+    def _export(self) -> dict:
+        for cb in list(self._refresh):
+            try:
+                cb()
+            except Exception as e:          # noqa: BLE001 — keep reporting
+                self._refresh.remove(cb)
+                print(f"obs.Reporter: refresh callback {cb!r} dropped "
+                      f"after error: {e!r}", file=sys.stderr)
+        return export_json(self._registry)
 
     def start(self) -> "Reporter":
         self._thread.start()
@@ -108,10 +153,10 @@ class Reporter:
 
     def _loop(self) -> None:
         while not self._stop.wait(self._interval):
-            self._sink(export_json(self._registry))
+            self._sink(self._export())
 
     def stop(self) -> None:
         if not self._stop.is_set():
             self._stop.set()
             self._thread.join()
-            self._sink(export_json(self._registry))
+            self._sink(self._export())

@@ -218,10 +218,15 @@ class Span:
     """Timed scope: ``with registry.span("store_flush", store="s0"): ...``
     records the duration into the ``<name>_seconds`` histogram and — only
     while a trace ring is attached — appends a trace event carrying name,
-    labels, thread, nesting depth, and wall window."""
+    labels, thread, nesting depth, wall window, and outcome.
+
+    A span that exits via an exception records ``ok: False`` on its trace
+    event and bumps ``<name>_errors_total`` (same labels), so failed
+    flushes/compactions are visible in both traces and counters; the
+    exception itself always propagates."""
 
     __slots__ = ("_reg", "_hist", "name", "labels", "t0", "duration",
-                 "_depth")
+                 "_depth", "ok")
 
     def __init__(self, reg: "MetricRegistry", hist: Histogram, name: str,
                  labels: Dict[str, str]):
@@ -232,6 +237,7 @@ class Span:
         self.t0 = 0.0
         self.duration = 0.0
         self._depth = 0
+        self.ok = True
 
     def __enter__(self) -> "Span":
         if self._reg.trace_ring is not None:  # the one hot-path check
@@ -241,10 +247,16 @@ class Span:
         self.t0 = time.perf_counter()
         return self
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, exc_type, exc, tb) -> None:
         dt = time.perf_counter() - self.t0
         self.duration = dt
         self._hist.observe(dt)
+        if exc_type is not None:
+            # Error path only: the registry map lookup is fine here — a
+            # failing span is never the hot path.
+            self.ok = False
+            self._reg.counter(self.name + "_errors_total",
+                              **self.labels).inc()
         ring = self._reg.trace_ring
         if ring is not None:
             tls = self._reg._tls
@@ -253,6 +265,7 @@ class Span:
                 "name": self.name, "labels": dict(self.labels),
                 "t0": self.t0, "dur": dt, "depth": self._depth,
                 "thread": threading.current_thread().name,
+                "ok": exc_type is None,
             })
 
 
@@ -302,7 +315,46 @@ class MetricRegistry:
         hist = self.histogram(name + "_seconds", **labels)
         return Span(self, hist, name, labels)
 
+    def remove(self, name: str, **labels) -> bool:
+        """Drop one series (exact name + labels) from the registry so
+        exporters stop reporting it — the dead-series lever for gauges
+        whose subject disappears (e.g. ``store_level_runs`` for a level
+        emptied by a full compaction).  Call sites that cached the
+        instrument reference may keep writing to it harmlessly; a later
+        get-or-create registers a FRESH instrument.  Returns True iff a
+        series was removed."""
+        key = (name, _label_key(labels))
+        with self._mu:
+            return self._metrics.pop(key, None) is not None
+
+    def find(self, name: str, **labels) -> List[object]:
+        """Every registered instrument with ``name`` whose labels are a
+        superset of ``labels`` — the read surface for derived-metric
+        ledgers that aggregate one metric across label values (e.g. all
+        ``storage_level_write_bytes`` series of one store)."""
+        with self._mu:
+            insts = [inst for (n, _k), inst in self._metrics.items()
+                     if n == name]
+        return [inst for inst in insts
+                if all(inst.labels.get(k) == str(v)
+                       for k, v in labels.items())]
+
     # ------------------------------------------------------------ tracing
+    def trace_instant(self, name: str, **labels) -> None:
+        """Record a zero-duration lifecycle event (flush rotate/commit,
+        compaction commit, quarantine, fence...) into the trace ring.
+        Exactly one attribute check when tracing is disabled — safe to
+        leave on cold paths unconditionally."""
+        ring = self.trace_ring
+        if ring is None:
+            return
+        ring.append({
+            "name": name, "labels": {k: str(v) for k, v in labels.items()},
+            "t0": time.perf_counter(), "dur": None,
+            "depth": getattr(self._tls, "depth", 0),
+            "thread": threading.current_thread().name, "ok": True,
+        })
+
     def enable_tracing(self, capacity: int = 4096) -> None:
         """Attach a bounded trace ring; spans start recording events."""
         self.trace_ring = deque(maxlen=capacity)

@@ -541,6 +541,9 @@ class ShardedGraphStore:
                 self._fenced = nxt
                 self._obs_fence_total.inc()
                 self._obs_fenced[int(s)].set(1)
+                obs.REGISTRY.trace_instant(
+                    "shard_fence", shard=str(int(s)),
+                    reason=f"{type(err).__name__}: {err}"[:80])
 
     def fenced(self) -> Dict[int, str]:
         """Snapshot of the fenced-shard map (shard -> reason); lock-free —
@@ -551,7 +554,11 @@ class ShardedGraphStore:
     def health_report(self) -> Dict[int, dict]:
         """Per-shard health: ``ok``, ``degraded`` (serving around
         quarantined segment ranges), or ``fenced`` (range unavailable until
-        ``reopen_shard``)."""
+        ``reopen_shard``), plus the shard's amplification ratios (write/
+        read/space + runs-per-query, ``None`` until the relevant counters
+        have data) — the ranking signal a per-shard compaction scheduler
+        consumes."""
+        from ..obs.amplification import AmplificationLedger
         fenced = self.fenced()
         report: Dict[int, dict] = {}
         for s, g in enumerate(self.shards):
@@ -568,6 +575,9 @@ class ShardedGraphStore:
                     entry["degraded"] = [
                         {"lo": r.lo, "hi": r.hi, "fid": r.fid,
                          "reason": r.reason} for r in dr]
+            # Ledgers are built on demand: reopen_shard swaps in a new
+            # store (fresh obs label), so a cached ledger would go stale.
+            entry["amplification"] = AmplificationLedger(g).ratios()
             report[s] = entry
         return report
 

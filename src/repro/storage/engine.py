@@ -141,6 +141,12 @@ class DurableStorage:
         t0 = time.perf_counter()
         nbytes = seg_mod.write_segment(path, rf)
         _OBS_SEG_WRITE.observe(time.perf_counter() - t0)
+        # Physical per-level write-amp numerator: every segment-file write
+        # (flush, compaction output, scrub heal) funnels through here.
+        if self.store is not None:
+            obs.counter("storage_level_write_bytes",
+                        store=self.store.obs_label,
+                        level=str(rf.level)).inc(nbytes)
         return nbytes
 
     def _crashpoint(self, name: str) -> None:
@@ -197,6 +203,8 @@ class DurableStorage:
         with self._deg_lock:
             self.degraded[rng.fid] = rng
         _OBS_QUARANTINE.inc()
+        obs.REGISTRY.trace_instant("storage_quarantine", fid=str(rng.fid),
+                                   reason=reason[:80])
         try:
             self._manifest_append({
                 "op": "quarantine", "fid": rng.fid, "reason": reason,
@@ -215,6 +223,7 @@ class DurableStorage:
 
     def mark_rebuilt(self, desc: dict) -> None:
         """Publish a successful rebuild: the fid is live again."""
+        obs.REGISTRY.trace_instant("storage_rebuild", fid=str(desc["fid"]))
         self._manifest_append({"op": "rebuild", "add": [desc]})
         with self._deg_lock:
             self.degraded.pop(int(desc["fid"]), None)

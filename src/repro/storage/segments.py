@@ -17,11 +17,16 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import csr
 from ..core.types import CSRRunArrays, RunFile
 from . import faultfs
 from .errors import CorruptionError, TransientIOError
 from .fsutil import fsync_dir as _fsync_dir
+
+# Cold-read feeder for the amplification ledger (process-wide: segment
+# files are read by loaders, recovery, and the scrubber — no store label).
+_OBS_SEG_READ_BYTES = obs.counter("storage_segment_read_bytes")
 
 MAGIC = b"LSMGSEG1"
 FORMAT_VERSION = 1
@@ -176,6 +181,7 @@ def read_segment(path: str, *, verify: bool = True
     if mm.shape[0] < need:
         raise CorruptionError(f"segment {path}: truncated body",
                               fid=meta["fid"])
+    _OBS_SEG_READ_BYTES.inc(_HDR.size + need)
     # crc32 accepts the buffer protocol: no .tobytes() copy of the whole
     # mmapped body — cold loads stay page-cache-streamed.
     if verify and zlib.crc32(mm[:need]) != meta["body_crc"]:

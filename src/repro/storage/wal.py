@@ -358,6 +358,8 @@ class WriteAheadLog:
                                os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
             if self.sync_mode != "off":
                 fsync_dir(self.dir)
+            obs.REGISTRY.trace_instant("storage_wal_rotate",
+                                       seq=str(self._seq))
             return self._seq
 
     def prune(self, floor_ts: int, retain: int = 0) -> int:

@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""Diff two benchmark trajectory files; fail on regression.
+
+``python tools/bench_compare.py BASELINE.json CANDIDATE.json`` compares
+two ``lsmg-bench-trajectory-v1`` documents (``benchmarks/trajectory.py``
+output, e.g. ``BENCH_PR8.json`` vs ``BENCH_PR9.json``) and exits
+non-zero when the candidate regressed past the thresholds:
+
+* per-suite cost rows: ``us_per_call`` grew by more than ``--threshold``
+  (relative), for rows slower than ``--min-us`` (fast rows are timer
+  noise, not signal);
+* amplification: any overall write/read/space ratio grew by more than
+  ``--amp-threshold`` (relative) in either probe mode.
+
+Rows present on only one side are reported (new/retired benchmarks are
+normal across PRs) but never fail the gate; a schema mismatch or an
+unreadable file always does.  `make bench-compare BASE=... CAND=...`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "lsmg-bench-trajectory-v1"
+
+# Amplification ratios compared: (path under "amplification", label).
+_AMP_KEYS = [
+    (("write", "overall"), "write-amp"),
+    (("read", "overall"), "read-amp"),
+    (("space", "overall"), "space-amp"),
+]
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SystemExit(f"bench-compare: cannot read {path}: {e}")
+    if doc.get("schema") != SCHEMA:
+        raise SystemExit(f"bench-compare: {path}: schema "
+                         f"{doc.get('schema')!r}, want {SCHEMA!r}")
+    return doc
+
+
+def _dig(d: dict, path: tuple):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def compare(base: dict, cand: dict, *, threshold: float,
+            amp_threshold: float, min_us: float) -> dict:
+    """Pure comparison: returns {"regressions": [...], "improved": n,
+    "compared": n, "only_base": [...], "only_cand": [...]}."""
+    regressions = []
+    improved = compared = 0
+    b_rows, c_rows = base.get("suites", {}), cand.get("suites", {})
+    for name in sorted(set(b_rows) & set(c_rows)):
+        b, c = b_rows[name]["us_per_call"], c_rows[name]["us_per_call"]
+        compared += 1
+        if b < min_us and c < min_us:
+            continue
+        if b > 0 and c > b * (1.0 + threshold):
+            regressions.append(
+                f"row {name}: {b:.1f} -> {c:.1f} us/call "
+                f"(+{(c / b - 1) * 100:.0f}% > {threshold * 100:.0f}%)")
+        elif c < b:
+            improved += 1
+    for mode in sorted(set(base.get("amplification", {}))
+                       & set(cand.get("amplification", {}))):
+        for path, label in _AMP_KEYS:
+            b = _dig(base["amplification"][mode], path)
+            c = _dig(cand["amplification"][mode], path)
+            if b is None or c is None:   # "no data" never gates
+                continue
+            compared += 1
+            if b > 0 and c > b * (1.0 + amp_threshold):
+                regressions.append(
+                    f"{mode} {label}: {b:.3f} -> {c:.3f} "
+                    f"(+{(c / b - 1) * 100:.0f}% > "
+                    f"{amp_threshold * 100:.0f}%)")
+    return {
+        "regressions": regressions,
+        "improved": improved,
+        "compared": compared,
+        "only_base": sorted(set(b_rows) - set(c_rows)),
+        "only_cand": sorted(set(c_rows) - set(b_rows)),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="allowed relative us_per_call growth per row "
+                         "(default 0.30 = +30%%)")
+    ap.add_argument("--amp-threshold", type=float, default=0.25,
+                    help="allowed relative growth of any overall "
+                         "amplification ratio (default 0.25)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="ignore rows where both sides are faster than "
+                         "this (timer noise floor, default 50 us)")
+    args = ap.parse_args()
+    base, cand = _load(args.baseline), _load(args.candidate)
+    res = compare(base, cand, threshold=args.threshold,
+                  amp_threshold=args.amp_threshold, min_us=args.min_us)
+    print(f"bench-compare: {args.baseline} (pr {base.get('pr')}) vs "
+          f"{args.candidate} (pr {cand.get('pr')}): "
+          f"{res['compared']} compared, {res['improved']} improved, "
+          f"{len(res['regressions'])} regressed")
+    if res["only_base"]:
+        print(f"bench-compare: retired rows: {res['only_base']}")
+    if res["only_cand"]:
+        print(f"bench-compare: new rows: {res['only_cand']}")
+    for r in res["regressions"]:
+        print(f"bench-compare: REGRESSION: {r}")
+    sys.exit(1 if res["regressions"] else 0)
+
+
+if __name__ == "__main__":
+    main()
