@@ -2,8 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: tier1 tier1-shard test bench bench-smoke bench-trajectory \
-        bench-trajectory-smoke bench-compare chaos-smoke obs-smoke \
-        lint-locks
+        bench-trajectory-smoke bench-compare bench-compare-prev \
+        chaos-smoke obs-smoke lint-locks
 
 # Fast verification gate: everything except the `slow`-marked end-to-end
 # tests (test_distributed.py spawns an 8-device subprocess mesh,
@@ -41,6 +41,19 @@ BASE ?= BENCH_PR$(PR).json
 CAND ?= BENCH_PR$(PR).json
 bench-compare:
 	$(PY) tools/bench_compare.py $(BASE) $(CAND)
+
+# CI drift gate vs the previous PR's committed trajectory: run a fresh
+# smoke-scale trajectory and schema-compare it against the newest
+# committed BENCH_PR<N>.json (row presence only — smoke timings are
+# noise, so no numeric thresholds; see tools/bench_compare.py
+# --schema-only).
+PREV ?= $(shell ls BENCH_PR*.json 2>/dev/null | sort -V | tail -1)
+bench-compare-prev:
+	@test -n "$(PREV)" || { echo "no committed BENCH_PR*.json"; exit 1; }
+	BENCH_SMOKE=1 $(PY) -m benchmarks.trajectory --pr 0 \
+		--out /tmp/bench_prev_cand.json
+	$(PY) tools/bench_compare.py --schema-only $(PREV) \
+		/tmp/bench_prev_cand.json
 
 # CI gate for the trajectory pipeline: tiny-scale run, schema validation,
 # and a bench_compare round-trip (identical passes, inflated copy fails).

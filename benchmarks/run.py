@@ -15,8 +15,8 @@ import traceback
 def suites() -> list:
     """(label, main) for every registered benchmark — the single registry
     both the full harness and the smoke gate iterate."""
-    from . import (bench_analytics, bench_durability, bench_index,
-                   bench_kernels, bench_memcache, bench_mixed,
+    from . import (bench_analytics, bench_durability, bench_filters,
+                   bench_index, bench_kernels, bench_memcache, bench_mixed,
                    bench_read_batch, bench_sharded, bench_space,
                    bench_update)
     return [
@@ -28,6 +28,7 @@ def suites() -> list:
         ("fig18 mixed", bench_mixed.main),
         ("kernels", bench_kernels.main),
         ("batched reads", bench_read_batch.main),
+        ("presence filters", bench_filters.main),
         ("durability", bench_durability.main),
         ("sharded scaling", bench_sharded.main),
     ]

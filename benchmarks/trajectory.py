@@ -102,7 +102,14 @@ def _amp_probe() -> dict:
     """Deterministic amplification scenario: the SAME mixed workload
     against a durable store (physical-byte ledger) and an in-memory one
     (logical-movement ledger), so trajectory files compare amplification
-    like-for-like across PRs."""
+    like-for-like across PRs.
+
+    Sources are EVEN vertex ids only, and the read phase queries both
+    parities: the even half measures the productive read path, the odd
+    (vertex-absent) half is the paper's "invalid random read" shape the
+    presence filters exist for — runs-per-query counts only runs with
+    post-filter visible pairs, and the durable mode's evicted scalar
+    sweep of absent vertices must reload (`read.cold_load_bytes`) nothing."""
     import numpy as np
 
     from repro import obs
@@ -123,15 +130,31 @@ def _amp_probe() -> dict:
             rng = np.random.default_rng(7)
             v = store_cfg().vmax
             for i in range(n_batches):
-                s = rng.integers(0, v, batch).astype(np.int64)
+                s = (rng.integers(0, v, batch) & ~1).astype(np.int64)
                 d = rng.integers(0, v, batch).astype(np.int64)
                 g.insert_edges(s, d)
                 if i % 3 == 2:
                     g.flush_memgraph()
             g.flush_memgraph()
             g.compact_l0()
+            # One more flushed batch AFTER the compaction: an L0 run (no
+            # per-vertex index entries, only fid gates) rides above L1 for
+            # the read phase — the run shape presence filters exist for.
+            s = (rng.integers(0, v, batch) & ~1).astype(np.int64)
+            d = rng.integers(0, v, batch).astype(np.int64)
+            g.insert_edges(s, d)
+            g.flush_memgraph()
             with g.snapshot() as snap:
                 snap.neighbors_batch(np.arange(0, v, 2, dtype=np.int64))
+                snap.neighbors_batch(np.arange(1, v, 2, dtype=np.int64))
+            if mode == "durable":
+                # Evicted-store sweep of filter-rejected vertices: the
+                # cold_load_bytes this store reports is exactly the
+                # reload traffic the filters failed to prevent.
+                g.durability.evict_all_segments()
+                with g.snapshot() as snap:
+                    for q in range(1, min(v, 257), 2):
+                        snap.neighbors_scalar(q)
             led = obs.AmplificationLedger(g)
             out[mode] = led.report(exact_space=True)
             g.close()

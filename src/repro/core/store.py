@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import csr, index as mlindex, memgraph as mg_mod
+from . import csr, filters, index as mlindex, memgraph as mg_mod
 from .. import obs
 from ..kernels import ops as kops
 from ..kernels.merge import MERGE_STATS as _MERGE_STATS
@@ -54,6 +54,17 @@ def _np(x) -> np.ndarray:
 # then takes the legacy concat-then-lexsort path) — an escape hatch, not a
 # tuning knob.
 _READ_TOURNAMENT_MAX_K = int(os.environ.get("LSMG_READ_TOURNAMENT_K", "8"))
+
+
+def _read_filters_enabled() -> bool:
+    """Per-run presence-filter gating on the read path.  Read PER RESOLVE
+    (not cached at import) so the filters-on/off equivalence tests and the
+    depth-sweep bench can flip ``LSMG_READ_FILTERS`` mid-process.  Filters
+    only ever REMOVE provably-absent (run, query) pairs, so the results
+    are byte-identical either way — 0 is an ablation lever, not a
+    correctness escape hatch."""
+    return os.environ.get("LSMG_READ_FILTERS", "1") not in (
+        "0", "false", "False")
 
 # Shared background pool for cold-segment loads: prefetch submissions from
 # the read path overlap disk I/O with device dispatch.  Process-wide and
@@ -220,33 +231,45 @@ def _splice_run_spine(base: _RunSpine, runs) -> _RunSpine:
 
 
 class _SpineCache:
-    """Store-level cache of the newest merged run spine, keyed by fid set.
+    """Store-level cache of recently merged run spines, keyed by fid set.
 
     ``get`` serves three cases: identical fid set -> reuse outright;
     overlapping set -> splice the delta; disjoint/cold -> from-scratch
-    build.  Single-slot: states request their spine in (roughly)
-    publication order, so the newest sealed epoch is the right splice
-    base.  Guarded by its own mutex — never a store writer lock, so a
+    build.  Generation-aware, TWO slots (newest first): a snapshot pinned
+    just before a flush/compaction commit still resolves against the
+    PREVIOUS sealed epoch — with one slot, the new epoch's spine evicts
+    it, and the old snapshot's next resolve forces a full splice/rebuild
+    (and then evicts the new epoch right back: cache ping-pong).  Keeping
+    one generation of history lets both epochs' snapshots hit.  The
+    splice base is the cached spine with the LARGEST fid overlap (ties ->
+    newest).  Guarded by its own mutex — never a store writer lock, so a
     reader building here can only wait on a peer reader."""
 
     def __init__(self) -> None:
         self._mu = threading.Lock()
-        self._base: Optional[_RunSpine] = None
+        self._slots: List[_RunSpine] = []   # newest-first, len <= 2
 
     def get(self, runs) -> _RunSpine:
         runs = tuple(runs)
         fids = frozenset(rf.fid for rf, _col in runs)
         with self._mu:
-            base = self._base
-            if base is not None and base.fids == fids:
-                _MERGE_STATS.bump("spine_reuse")
-                return base
-            if base is not None and fids and (base.fids & fids):
+            for cached in self._slots:
+                if cached.fids == fids:
+                    _MERGE_STATS.bump("spine_reuse")
+                    return cached
+            base: Optional[_RunSpine] = None
+            best = 0
+            if fids:
+                for cached in self._slots:
+                    overlap = len(cached.fids & fids)
+                    if overlap > best:
+                        best, base = overlap, cached
+            if base is not None:
                 spine = _splice_run_spine(base, runs)
             else:
                 spine = _build_run_spine(runs)
-            if fids or base is None:
-                self._base = spine
+            if fids or not self._slots:
+                self._slots = ([spine] + self._slots)[:2]
             return spine
 
 
@@ -315,8 +338,35 @@ def _build_state_backbone(state: StoreState, store: "LSMGraph"):
             cols = kops.tournament_merge([mem_stream, tuple(cols)])
             cols = _fit_spine_cols(cols, total)
     src, d, t, rid, m, p = cols
+    fwords, fmasks = _stack_presence(spine.runs)
     return _ReadBackbone(src, d, t, rid, m, p, _np(d), _np(p),
-                         list(spine.runs))
+                         list(spine.runs), fwords, fmasks)
+
+
+def _stack_presence(runs):
+    """Stack the per-run presence filters into one device-resident
+    (uint32[R, W] words, uint32[R] masks) pair for the vectorized batched
+    membership test.  Rows are padded to the widest filter; a run WITHOUT
+    a filter (pre-v2 segment) gets an all-ones row — every probe hits, so
+    it degrades to "always maybe" exactly like the scalar path's
+    ``presence is None`` case.  W stays a power of two (max over
+    power-of-two word counts), so the all-ones mask W*32-1 is valid."""
+    filts = [rf.presence for rf, _col in runs]
+    if not filts or all(f is None for f in filts):
+        return None, None
+    width = max(f.words.shape[0] for f in filts if f is not None)
+    mat = np.empty((len(filts), width), np.uint32)
+    masks = np.empty(len(filts), np.uint32)
+    for i, f in enumerate(filts):
+        if f is None:
+            mat[i] = np.uint32(0xFFFFFFFF)
+            masks[i] = width * 32 - 1
+        else:
+            nw = f.words.shape[0]
+            mat[i, :nw] = f.words
+            mat[i, nw:] = 0   # masked off: positions never exceed mbits-1
+            masks[i] = f.mbits - 1
+    return jnp.asarray(mat), jnp.asarray(masks)
 
 
 class LSMGraph:
@@ -380,6 +430,16 @@ class LSMGraph:
                                             store=self.obs_label)
         self._obs_read_returned = obs.counter("read_returned_bytes",
                                               store=self.obs_label)
+        # Presence-filter telemetry (tentpole of PR 10): checked = (run,
+        # query) pairs tested, skipped = pairs the filter proved absent,
+        # false_positive = filter said "maybe" but the gather found
+        # nothing (scalar path only — the one place a miss is observable).
+        self._obs_filter_checked = obs.counter("read_filter_checked_total",
+                                               store=self.obs_label)
+        self._obs_filter_skipped = obs.counter("read_filter_skipped_total",
+                                               store=self.obs_label)
+        self._obs_filter_fp = obs.counter(
+            "read_filter_false_positive_total", store=self.obs_label)
         self.on_flush_needed = None  # callback for the concurrent wrapper
         self._ts = 0
         self._next_fid = 0
@@ -741,11 +801,13 @@ class LSMGraph:
         if nv > 0:
             vk = _np(run.vkeys[:nv])
             min_v, max_v = int(vk[0]), int(vk[-1])
+            presence = filters.from_vkeys(vk)
         else:
             min_v, max_v = 0, -1
+            presence = filters.from_vkeys(np.empty(0, np.int64))
         return RunFile(fid=self._new_fid(), level=level, arrays=run,
                        min_vid=min_v, max_vid=max_v, created_ts=self._ts,
-                       nv=nv, ne=ne, io=self.io)
+                       nv=nv, ne=ne, io=self.io, presence=presence)
 
     # ------------------------------------------------------------ compaction
     def compact_l0(self) -> None:
@@ -1157,6 +1219,14 @@ class _ReadBackbone:
     dst_np: np.ndarray          # host copies for the output gather
     prop_np: np.ndarray
     runs: List[Tuple[RunFile, int]]   # rid order; col < 0 means L0
+    # Stacked presence-filter words of ``runs`` (uint32[R, W], rows padded
+    # to the widest filter; all-ones row = run without a filter) + per-run
+    # position masks (uint32[R] = mbits - 1).  None when no run carries a
+    # filter.  Built once per sealed epoch alongside the spine, so every
+    # resolve tests the whole query vector against all runs in one
+    # vectorized pass (``kernels.ops.presence_matrix``).
+    fwords: Optional[jnp.ndarray] = None
+    fmasks: Optional[jnp.ndarray] = None
 
 
 class Snapshot:
@@ -1294,20 +1364,28 @@ class Snapshot:
     # graph resolves stream in bounded memory instead of one |V|-sized spike.
     _BATCH_CHUNK = 1 << 14
 
-    def _prefetch_range(self, lo: int, hi: int) -> int:
+    def _prefetch_range(self, lo: int, hi: int,
+                        queries: Optional[np.ndarray] = None) -> int:
         """Kick background loads for every cold visible run whose vertex
         range overlaps [lo, hi] — host metadata only, no device sync, so
         disk I/O overlaps whatever the caller dispatches next.  Conservative
         superset of the runs a resolve of that range will touch; their
-        ``ensure_loaded`` joins the in-flight load.  Returns the number of
-        loads scheduled."""
+        ``ensure_loaded`` joins the in-flight load.  When the exact query
+        vector is known, each run's presence filter gates the schedule: a
+        cold run that rejects EVERY query is provably untouched by the
+        resolve, so its disk load is skipped outright.  Returns the number
+        of loads scheduled."""
         if hi < lo:
             return 0
+        use_filters = queries is not None and _read_filters_enabled()
         n = 0
         pool = None
         for rf in self.runs_by_fid.values():
             if (rf.arrays is None and rf.nv > 0
                     and rf.max_vid >= lo and rf.min_vid <= hi):
+                if (use_filters and rf.presence is not None
+                        and not rf.presence.might_contain(queries).any()):
+                    continue
                 if pool is None:
                     pool = prefetch_pool()
                 n += rf.prefetch(pool)
@@ -1331,7 +1409,9 @@ class Snapshot:
                 # annihilates.  Once the backbone exists, chunks never
                 # touch segment arrays again.
                 nxt = chunks[i + 1]
-                self._prefetch_range(int(nxt[0]), int(nxt[-1]))
+                self._prefetch_range(
+                    int(nxt[0]), int(nxt[-1]),
+                    queries=nxt if _READ_TOURNAMENT_MAX_K <= 0 else None)
             offs, dst, prop = self._resolve_batch(cu, pad_to=chunk_pad)
             offs_l.append(offs[1:] + base)
             dst_l.append(dst)
@@ -1392,8 +1472,13 @@ class Snapshot:
         if not self.spine_ready():
             # Pre-spine only: once the backbone holds the merged records,
             # evicted segment arrays are never read again on this snapshot
-            # — reloading them would be pure wasted I/O.
-            self._prefetch_range(lo_q, hi_q)
+            # — reloading them would be pure wasted I/O.  Filter-gating
+            # applies only on the legacy path: the spine build merges
+            # every run regardless, so skipping its prefetch would just
+            # move the load into the foreground.
+            self._prefetch_range(
+                lo_q, hi_q,
+                queries=u if _READ_TOURNAMENT_MAX_K <= 0 else None)
         u_pad = np.full(bp, int(INVALID_VID), np.int64)
         u_pad[:B] = u
         u_j = jnp.asarray(u_pad, jnp.int32)
@@ -1402,17 +1487,15 @@ class Snapshot:
         bb = self._get_backbone()
         mem = self.state.mem
         have_mem = int(mem.ne) != 0
-        # Read-amp accounting: sorted sources this batch consults (spine
-        # runs + the active MemGraph tier).  Batch-amortized — divide by
-        # read_queries_total for the per-query figure.
-        self._store._obs_read_probes.inc(len(bb.runs) + int(have_mem))
         if bb.src.shape[0] == 0 and not have_mem:
+            self._store._obs_read_probes.inc(0)
             return (np.zeros(B + 1, np.int64), np.empty(0, np.int64),
                     np.empty(0, np.float32))
         tau_j = jnp.asarray(self.tau, jnp.int32)
         nq_j = jnp.asarray(B, jnp.int32)
         qid = live = None
         n_run = 0
+        probed = int(have_mem)
         if bb.src.shape[0]:
             # Vectorized index lookup -> per-(run, query) visibility.
             first_g, min_g, lvl_fid_g, _ = mlindex.lookup_batch(
@@ -1433,9 +1516,30 @@ class Snapshot:
                     vis_rows.append(lvl_np[:, col] == rf.fid)
             vis_mat = (np.stack(vis_rows) if vis_rows
                        else np.zeros((1, bp), bool))
+            if vis_rows and bb.fwords is not None and _read_filters_enabled():
+                # One vectorized membership test of the whole query vector
+                # against every run's filter; AND it into the visibility
+                # matrix so filtered-out (run, query) pairs are dropped
+                # BEFORE spine rank + annihilation.  Zero false negatives
+                # (hash contract with the builder), so this only removes
+                # provably-dead pairs — results stay byte-identical.
+                fhit = _np(kops.presence_matrix(bb.fwords, bb.fmasks, u_j))
+                pre = int(np.count_nonzero(vis_mat[:, :B]))
+                vis_mat &= fhit
+                store = self._store
+                store._obs_filter_checked.inc(pre)
+                store._obs_filter_skipped.inc(
+                    pre - int(np.count_nonzero(vis_mat[:, :B])))
+            # Read-amp accounting: sorted sources this batch actually
+            # consults — runs with at least one visible query post-filter,
+            # plus the active MemGraph tier.  Batch-amortized — divide by
+            # read_queries_total for the per-query figure.
+            if vis_rows:
+                probed += int(np.count_nonzero(vis_mat[:, :B].any(axis=1)))
             qid, live, n_run = _backbone_resolve(
                 bb.src, bb.dst, bb.ts, bb.rid, bb.marker, u_j,
                 jnp.asarray(vis_mat), tau_j, nq_j)
+        self._store._obs_read_probes.inc(probed)
         if not have_mem:
             return self._finish_resolve(qid, bb.dst_np, bb.prop_np,
                                         live, int(n_run), B)
@@ -1462,12 +1566,32 @@ class Snapshot:
         first_g, min_g, lvl_fid_g, _ = mlindex.lookup_batch(self.index, u_j)
         first_np, min_np = _np(first_g), _np(min_g)
         lvl_np = _np(lvl_fid_g)
+        use_filters = _read_filters_enabled()
+        store = self._store
+
+        def filter_vis(rf, vis):
+            # AND the run's presence filter into its visibility row BEFORE
+            # the any() gate, so a run every query misses is skipped — and
+            # never ``ensure_loaded`` — on this per-run path.  L1+ indexed
+            # rows skip this: the multi-level index is exact per vertex,
+            # so a filter can only re-confirm it.
+            if not use_filters or rf.presence is None:
+                return vis
+            pre = int(np.count_nonzero(vis[:B]))
+            vis = vis.copy()
+            vis[:B] &= rf.presence.might_contain(u)
+            store._obs_filter_checked.inc(pre)
+            store._obs_filter_skipped.inc(
+                pre - int(np.count_nonzero(vis[:B])))
+            return vis
+
         runs: List[Tuple[RunFile, Optional[np.ndarray]]] = []
         for rf in self.l0_runs:
             if rf.nv == 0 or rf.max_vid < lo_q or rf.min_vid > hi_q:
                 continue
             vis = ((rf.fid >= min_np)
                    & ((first_np == INVALID_VID) | (rf.fid >= first_np)))
+            vis = filter_vis(rf, vis)
             if vis[:B].any():
                 runs.append((rf, vis))
         if self.cfg.use_multilevel_index:
@@ -1483,7 +1607,11 @@ class Snapshot:
                 for rf in lvl:
                     if rf.nv == 0 or rf.max_vid < lo_q or rf.min_vid > hi_q:
                         continue
-                    runs.append((rf, None))
+                    vis = filter_vis(rf, np.ones(bp, bool))
+                    if not vis[:B].any():
+                        continue
+                    runs.append((rf, vis if use_filters
+                                 and rf.presence is not None else None))
         self._store._obs_read_probes.inc(len(runs) + len(mems))
         if not mems and not runs:
             return (np.zeros(B + 1, np.int64), np.empty(0, np.int64),
@@ -1578,14 +1706,38 @@ class Snapshot:
             int(self.index.l0_first_fid[v]), int(self.index.l0_min_fid[v]),
             _np(self.index.lvl_fid[v]), _np(self.index.lvl_off[v]))
         bytes_read = 0
+        use_filters = _read_filters_enabled()
+        store = self._store
+
+        def filter_rejects(rf) -> bool:
+            # Presence pre-gate: a rejecting filter skips the gather — and,
+            # for a cold run, the whole segment reload (the filter words
+            # survive eviction).  The false-positive counter calibrates the
+            # bits-per-key budget against live traffic.
+            if not use_filters or rf.presence is None:
+                return False
+            store._obs_filter_checked.inc(1)
+            if not bool(rf.presence.might_contain(v)[0]):
+                store._obs_filter_skipped.inc(1)
+                return True
+            return False
+
+        def note_fp(rf) -> None:
+            if use_filters and rf.presence is not None:
+                store._obs_filter_fp.inc(1)
+
         for rf in self.l0_runs:
             if rf.fid < min_fid or (first_fid != INVALID_VID
                                     and rf.fid < first_fid):
+                continue
+            if filter_rejects(rf):
                 continue
             r = _gather_vertex(rf, v)
             if r is not None:
                 recs.append(r)
                 bytes_read += len(r[0]) * (BYTES_PER_EDGE + BYTES_PER_PROP)
+            else:
+                note_fp(rf)
         if self.cfg.use_multilevel_index:
             for col in range(lvl_fid.shape[0]):
                 fid = int(lvl_fid[col])
@@ -1603,11 +1755,15 @@ class Snapshot:
                 for rf in lvl:
                     if rf.nv == 0 or not (rf.min_vid <= v <= rf.max_vid):
                         continue
+                    if filter_rejects(rf):
+                        continue
                     r = _gather_vertex(rf, v)
                     if r is not None:
                         recs.append(r)
                         bytes_read += len(r[0]) * (
                             BYTES_PER_EDGE + BYTES_PER_PROP)
+                    else:
+                        note_fp(rf)
         self._store.io.analytics_read += bytes_read
         self._store._obs_read_queries.inc(1)
         self._store._obs_read_probes.inc(len(recs))

@@ -88,6 +88,12 @@ class RunFile:
     path: Optional[str] = None
     loader: Optional[Callable[[], CSRRunArrays]] = dataclasses.field(
         default=None, repr=False)
+    # Device-resident vertex-presence filter (core.filters.PresenceFilter)
+    # over this run's source-vertex set.  Deliberately OUTSIDE the
+    # evictable ``arrays``: a cold run can reject a query — and dodge the
+    # segment reload — without touching disk.  None = no filter (pre-v2
+    # segment, or a run the caller chose not to filter): always "maybe".
+    presence: Optional[object] = dataclasses.field(default=None, repr=False)
     # Store-level I/O counters for retry accounting (set by the owning
     # store; None for standalone RunFiles).
     io: Optional["IOCounters"] = dataclasses.field(default=None, repr=False)
@@ -140,6 +146,11 @@ class RunFile:
                         f"RunFile fid={self.fid} has no arrays and no loader")
                 self._OBS_MISS.inc()
                 self._OBS_COLD_BYTES.inc(self.nbytes)
+                if self.io is not None:
+                    # Per-store attribution of the same bytes: the ledger's
+                    # read-amp report prefers this over the process-wide
+                    # class counter, which mixes every store's cold loads.
+                    self.io.cold_load += self.nbytes
                 t0 = time.perf_counter()
                 a = self._load_with_retry(_retry_counter)
                 self._OBS_LOAD.observe(time.perf_counter() - t0)
@@ -313,6 +324,9 @@ class IOCounters:
     segment_write: int = 0    # durable: segment file bytes written
     segment_read: int = 0     # durable: segment file bytes (re)loaded
     manifest_write: int = 0   # durable: manifest edit-log bytes appended
+    cold_load: int = 0        # durable: segment bytes materialized by
+    #                           cold loads (per-store slice of the
+    #                           process-wide read_cold_load_bytes)
     read_retries: int = 0     # transient-I/O retries on foreground loads
     prefetch_retries: int = 0  # transient-I/O retries in the prefetch pool
 
@@ -368,6 +382,7 @@ class IOCounters:
             segment_write=self.segment_write - other.segment_write,
             segment_read=self.segment_read - other.segment_read,
             manifest_write=self.manifest_write - other.manifest_write,
+            cold_load=self.cold_load - other.cold_load,
             read_retries=self.read_retries - other.read_retries,
             prefetch_retries=self.prefetch_retries - other.prefetch_retries,
         )

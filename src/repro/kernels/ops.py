@@ -18,6 +18,8 @@ from .lookup import batched_searchsorted as _search
 from .merge import (lex_searchsorted, merge_perm as _merge_perm,
                     merge_streams as _merge_streams,
                     tournament_merge as _tournament_merge)
+from .presence import (presence_matrix_pallas as _presence_pallas,
+                       presence_matrix_ref as _presence_ref)
 from .segment_reduce import (gather_segmin as _gather_segmin,
                              gather_segsum as _gather_segsum)
 
@@ -78,6 +80,20 @@ def tournament_merge(streams, *, use_pallas=None):
                              interpret=default_interpret())
 
 
+def presence_matrix(words, masks, queries, *, use_pallas=None):
+    """Vectorized vertex-presence test: bool[R, B] hit matrix from every
+    visible run's packed filter words (the batched read path's pre-gate).
+    Backend default mirrors ``merge_streams``: the Pallas row-gather
+    kernel on a real TPU, the pure-jnp broadcast gather on CPU —
+    bit-identical either way."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return _presence_ref(words, masks, queries)
+    return _presence_pallas(words, masks, queries,
+                            interpret=default_interpret())
+
+
 def batched_searchsorted(keys, queries, n_keys, *, use_pallas: bool = True):
     """Batched binary search (no-index ablation probe / L0 probes)."""
     if not use_pallas:
@@ -96,5 +112,5 @@ def attention(q, k, v, *, causal: bool = True, scale=None,
 
 
 __all__ = ["gather_segsum", "gather_segmin", "merge_perm", "merge_streams",
-           "tournament_merge", "batched_searchsorted", "attention",
-           "lex_searchsorted", "default_interpret"]
+           "tournament_merge", "batched_searchsorted", "presence_matrix",
+           "attention", "lex_searchsorted", "default_interpret"]

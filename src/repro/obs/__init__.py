@@ -31,7 +31,21 @@ layer's instruments:
 * ``shard_*``  — shard/store.py: per-shard fencing state, ack latency,
   degraded-range count, routed-batch fan-out.
 * ``read_*``   — the read path (core/store.py resolve + core/types.py
-  prefetch): resolve batch latency, prefetch hit/miss.
+  prefetch): resolve batch latency, prefetch hit/miss, and the presence-
+  filter counters — ``read_filter_checked_total`` ((run, query) pairs
+  tested against a run's vertex-presence filter),
+  ``read_filter_skipped_total`` (pairs the filter proved absent — device
+  work and, on the per-run paths, cold segment loads avoided),
+  ``read_filter_false_positive_total`` (filter said "maybe", the gather
+  found nothing; observable on the scalar path only).  All three carry
+  ``store=``; skipped/checked is the filter's live selectivity, and
+  false-positive/checked calibrates the bits-per-key budget.
+* ``compaction_*`` — shard/scheduler.py: the amplification-driven
+  scheduler's decision stream.  ``compaction_sched_decision_total``
+  (``decision=`` ``compact`` | ``skip_hot`` | ``skip_backoff`` | ``idle``
+  — a closed enum), ``compaction_sched_compactions_total`` (``shard=``),
+  and the ``compaction_sched_interval_seconds`` gauge tracking the
+  backoff-widened tick.  Written only by the scheduler thread.
 * ``io_*``     — the ``IOCounters`` mirror (core/types.py): byte counters
   kept byte-compatible with the legacy dataclass API.
 * ``merge_*``  — the ``MERGE_STATS`` view (kernels/merge.py): kernel-vs-

@@ -127,15 +127,24 @@ class AmplificationLedger:
         returned = self._value("read_returned_bytes")
         queries = self._value("read_queries_total")
         probes = self._value("read_runs_probed_total")
-        # Cold segment loads are process-wide (RunFile class counters):
-        # reported for context, not part of the per-store ratio.
-        cold = self.registry.counter("read_cold_load_bytes").value
+        # Cold-load attribution: ``io_cold_load_bytes`` is THIS store's
+        # evicted-segment reload traffic (the presence filters exist to
+        # shrink it); the RunFile class counter stays as the process-wide
+        # figure for context (loaders/recovery/scrub included).
+        cold = self._value("io_cold_load_bytes")
+        cold_process = self.registry.counter("read_cold_load_bytes").value
+        filt_checked = self._value("read_filter_checked_total")
+        filt_skipped = self._value("read_filter_skipped_total")
         return {
             "queries": queries,
             "runs_probed": probes,
             "bytes_touched": touched,
             "bytes_returned": returned,
             "cold_load_bytes": cold,
+            "cold_load_bytes_process": cold_process,
+            "filter_checked": filt_checked,
+            "filter_skipped": filt_skipped,
+            "filter_skip_ratio": _ratio(filt_skipped, filt_checked),
             "overall": _ratio(touched, returned),
             "runs_per_query": _ratio(probes, queries),
         }

@@ -62,18 +62,45 @@ seqs (``storage.wal.WalAppend``).  A routed write returns a
 ``ShardWriteReceipt`` with one seq per touched shard; ``ack(receipt)``
 awaits ``sync_upto(seq)`` on exactly those shards' logs — the group-commit
 ack tier: callers pay for the fsync of *their* batch on *their* shards only.
+
+Compaction scheduling policy
+----------------------------
+
+``scheduler.CompactionScheduler`` replaces the ``compact_all()`` barrier
+for steady state: one worst-offender shard compacts per tick while the
+rest keep ingesting.
+
+* **Ranking formula**: ``score(s) = l0_weight * L0_depth(s) + read_weight
+  * runs_per_query(s)`` — L0 depth from the shard's published
+  ``StoreState`` (write debt), runs-per-query from
+  ``AmplificationLedger.ratios()`` (the read side paying for that debt).
+  Shards with fewer than ``min_l0`` L0 runs, fenced shards, and shards
+  whose ``shard_ack_seconds`` count advanced since the last tick (a
+  writer is committing there — HOT) are ineligible.
+* **Backoff rule**: per tick the scheduler compares the windowed mean ack
+  latency (delta sum / delta count of ``shard_ack_seconds`` across all
+  shards) against the previous window; if last tick compacted and the
+  mean grew by more than ``ack_slowdown``x, compaction pauses and the
+  tick interval multiplies by ``backoff`` (capped at ``max_interval``),
+  decaying back to ``interval`` over calm windows — the budget is
+  denominated in writer-observed ack seconds, so scheduling can never
+  silently inflate writer p99.
+
+Decisions land in the ``compaction_sched_*`` metric families (see the
+observability-model doc in ``repro.obs``).
 """
 from __future__ import annotations
 
 from .partition import RangePartition, shard_scaled_config
 from .router import (bucket_edge_batches, make_mesh_write_router,
                      route_queries)
+from .scheduler import CompactionScheduler
 from .store import (DegradedReport, ShardUnavailable, ShardWriteReceipt,
                     ShardedGraphStore, ShardedSnapshot, open_sharded_store)
 
 __all__ = [
-    "DegradedReport", "RangePartition", "ShardUnavailable",
-    "ShardWriteReceipt", "ShardedGraphStore",
+    "CompactionScheduler", "DegradedReport", "RangePartition",
+    "ShardUnavailable", "ShardWriteReceipt", "ShardedGraphStore",
     "ShardedSnapshot", "bucket_edge_batches", "make_mesh_write_router",
     "open_sharded_store", "route_queries",
     "shard_scaled_config",

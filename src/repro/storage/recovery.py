@@ -23,6 +23,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import filters
 from ..core import index as mlindex
 from ..core.store import LSMGraph
 from ..core.types import RunFile, StoreConfig
@@ -129,7 +130,8 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
             fid=fid, level=desc["level"], arrays=run,
             min_vid=desc["min_vid"], max_vid=desc["max_vid"],
             created_ts=desc["created_ts"], nv=desc["nv"], ne=desc["ne"],
-            path=path, loader=storage.make_loader(path, desc), io=store.io)
+            path=path, loader=storage.make_loader(path, desc), io=store.io,
+            presence=_recover_presence(path, run, desc))
         storage.seg_descs[fid] = desc
         levels[rf.level].append(rf)
     for lvl in range(cfg.n_levels):
@@ -179,6 +181,22 @@ def _recover_into(storage: DurableStorage, root: str, cfg: StoreConfig,
                              np.asarray(marker)[keep],
                              np.asarray(prop)[keep])
     return store
+
+
+def _recover_presence(path: str, run, desc: dict):
+    """Presence filter for a recovered segment: rehydrate the v2 file
+    section when it reads clean, else derive from the (already loaded,
+    already CRC'd) arrays — same words by determinism.  Covers v1 legacy
+    files and rotten sections alike; a bad section is left for the
+    scrubber's ``verify_segment`` pass to heal."""
+    try:
+        filt = seg_mod.read_segment_filter(path)
+    except (CorruptionError, OSError):
+        filt = None
+    if filt is not None:
+        return filt
+    nv = int(desc["nv"])
+    return filters.from_vkeys(np.asarray(run.vkeys)[:nv])
 
 
 def _load_checked(store: LSMGraph, path: str, desc: dict):

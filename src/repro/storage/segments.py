@@ -6,19 +6,28 @@ property section (prop) — the paper's CSR file + property file packed into
 one file so ``os.replace`` publishes both atomically.  Only valid prefixes
 are stored; load re-pads to quantized capacities, so a round trip is exact
 on the valid region.  See the package docstring for the byte-level spec.
+
+Format v2 appends a CRC'd VERTEX-PRESENCE FILTER section after the body:
+a 16-byte section header (magic ``FLT1``, section CRC, mbits, word count)
+followed by the packed ``uint32`` filter words (``core.filters``).  The
+filter is a pure deterministic function of the body's vkey set, so a
+segment rebuilt from its WAL generation regenerates a byte-identical
+section.  Reads stay backward compatible: v1 files (no section) load
+unchanged and simply report "no filter"; the body CRC never covers the
+section, so v1 readers that tolerate trailing bytes also keep working.
 """
 from __future__ import annotations
 
 import os
 import struct
 import zlib
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
-from ..core import csr
+from ..core import csr, filters
 from ..core.types import CSRRunArrays, RunFile
 from . import faultfs
 from .errors import CorruptionError, TransientIOError
@@ -29,9 +38,15 @@ from .fsutil import fsync_dir as _fsync_dir
 _OBS_SEG_READ_BYTES = obs.counter("storage_segment_read_bytes")
 
 MAGIC = b"LSMGSEG1"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+#: Versions this reader accepts (v1 = pre-filter files from older stores).
+SUPPORTED_VERSIONS = (1, 2)
 _HDR = struct.Struct("<8sIIIiqqqqII")  # 64 bytes
 assert _HDR.size == 64
+
+_FLT_MAGIC = b"FLT1"
+_FHDR = struct.Struct("<4sIII")  # magic, section crc, mbits, n words
+assert _FHDR.size == 16
 
 
 def _np(x) -> np.ndarray:
@@ -59,9 +74,20 @@ def advise_willneed(path: str) -> None:
         os.close(fd)
 
 
-def write_segment(path: str, rf: RunFile) -> int:
+def write_segment(path: str, rf: RunFile, *,
+                  version: int = FORMAT_VERSION) -> int:
     """Serialize ``rf`` to ``path`` (tmp file + fsync + atomic replace +
-    dir fsync).  Returns bytes written."""
+    dir fsync).  Returns bytes written.
+
+    ``version`` defaults to the current format; pass 1 to emit a legacy
+    pre-filter file (tests exercise the backward-compat read path with
+    it).  The v2 filter section is computed HERE from the body's vkeys —
+    never taken from ``rf.presence`` — so a WAL rebuild of the same run
+    (``scrub.rebuild_segment_from_wal``) regenerates the section
+    byte-identically."""
+    if version not in SUPPORTED_VERSIONS:
+        raise ValueError(f"segment version {version} not in "
+                         f"{SUPPORTED_VERSIONS}")
     a = rf.arrays
     nv, ne = rf.nv, rf.ne
     body = b"".join((
@@ -72,18 +98,24 @@ def write_segment(path: str, rf: RunFile) -> int:
         _np(a.marker[:ne]).astype("<u1").tobytes(),
         _np(a.prop[:ne]).astype("<f4").tobytes(),
     ))
-    hdr = _pack_header(rf, zlib.crc32(body))
+    hdr = _pack_header(rf, zlib.crc32(body), version)
+    sect = b""
+    if version >= 2:
+        words = filters.build_words(_np(a.vkeys[:nv]).astype(np.int64))
+        sect = _pack_filter_section(words)
     tmp = path + ".tmp"
     fd = os.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
     try:
         _write_all(fd, hdr, path)
         _write_all(fd, body, path)
+        if sect:
+            _write_all(fd, sect, path)
         faultfs.fsync(fd, path)
     finally:
         os.close(fd)
     os.replace(tmp, path)
     _fsync_dir(os.path.dirname(path))
-    return len(hdr) + len(body)
+    return len(hdr) + len(body) + len(sect)
 
 
 def _write_all(fd: int, data: bytes, path: str) -> None:
@@ -92,12 +124,24 @@ def _write_all(fd: int, data: bytes, path: str) -> None:
         view = view[faultfs.write(fd, view, path):]
 
 
-def _pack_header(rf: RunFile, body_crc: int) -> bytes:
-    raw = _HDR.pack(MAGIC, FORMAT_VERSION, 0, body_crc, rf.level, rf.fid,
+def _pack_header(rf: RunFile, body_crc: int,
+                 version: int = FORMAT_VERSION) -> bytes:
+    raw = _HDR.pack(MAGIC, version, 0, body_crc, rf.level, rf.fid,
                     rf.min_vid, rf.max_vid, rf.created_ts, rf.nv, rf.ne)
     hcrc = zlib.crc32(raw)
-    return _HDR.pack(MAGIC, FORMAT_VERSION, hcrc, body_crc, rf.level, rf.fid,
+    return _HDR.pack(MAGIC, version, hcrc, body_crc, rf.level, rf.fid,
                      rf.min_vid, rf.max_vid, rf.created_ts, rf.nv, rf.ne)
+
+
+def _pack_filter_section(words: np.ndarray) -> bytes:
+    """Filter section bytes: 16-byte header + packed uint32 words.  The
+    section CRC covers mbits + nwords + payload, so a flipped shape field
+    is caught even when the payload bytes survive."""
+    payload = np.asarray(words, np.uint32).astype("<u4").tobytes()
+    nwords = len(words)
+    mbits = nwords * 32
+    fcrc = zlib.crc32(struct.pack("<II", mbits, nwords) + payload)
+    return _FHDR.pack(_FLT_MAGIC, fcrc, mbits, nwords) + payload
 
 
 def read_segment_header(path: str) -> dict:
@@ -122,14 +166,15 @@ def read_segment_header(path: str) -> dict:
      created_ts, nv, ne) = _HDR.unpack(raw)
     if magic != MAGIC:
         raise CorruptionError(f"segment {path}: bad magic")
-    if ver != FORMAT_VERSION:
+    if ver not in SUPPORTED_VERSIONS:
         raise CorruptionError(f"segment {path}: unsupported version {ver}")
     zeroed = _HDR.pack(magic, ver, 0, body_crc, level, fid, min_vid,
                        max_vid, created_ts, nv, ne)
     if zlib.crc32(zeroed) != hcrc:
         raise CorruptionError(f"segment {path}: header CRC mismatch")
     return dict(fid=fid, level=level, min_vid=min_vid, max_vid=max_vid,
-                created_ts=created_ts, nv=nv, ne=ne, body_crc=body_crc)
+                created_ts=created_ts, nv=nv, ne=ne, body_crc=body_crc,
+                ver=ver)
 
 
 def body_nbytes(nv: int, ne: int) -> int:
@@ -138,9 +183,10 @@ def body_nbytes(nv: int, ne: int) -> int:
 
 
 def verify_segment(path: str) -> dict:
-    """CRC-verify header + body without materializing run arrays (the
-    scrubber's cheap integrity pass).  Returns the header meta; raises
-    ``CorruptionError`` / ``TransientIOError`` like ``read_segment``."""
+    """CRC-verify header + body — and, for v2 files, the filter section —
+    without materializing run arrays (the scrubber's cheap integrity
+    pass).  Returns the header meta; raises ``CorruptionError`` /
+    ``TransientIOError`` like ``read_segment``."""
     meta = read_segment_header(path)
     nv, ne = meta["nv"], meta["ne"]
     try:
@@ -158,7 +204,59 @@ def verify_segment(path: str) -> dict:
     if zlib.crc32(mm[:need]) != meta["body_crc"]:
         raise CorruptionError(f"segment {path}: body CRC mismatch",
                               fid=meta["fid"])
+    if meta["ver"] >= 2:
+        _read_filter_words(path, meta)   # raises on a rotten section
     return meta
+
+
+def _read_filter_words(path: str, meta: dict) -> np.ndarray:
+    """Read + CRC-check a v2 file's filter section; returns the uint32
+    words.  Only called for ``meta['ver'] >= 2`` — a missing or short
+    section there is corruption, not a legacy file."""
+    off = _HDR.size + body_nbytes(meta["nv"], meta["ne"])
+    try:
+        faultfs.check_read(path)
+        with open(path, "rb") as f:
+            f.seek(off)
+            raw = f.read(_FHDR.size)
+            if len(raw) != _FHDR.size:
+                raise CorruptionError(
+                    f"segment {path}: truncated filter section",
+                    fid=meta["fid"])
+            fmagic, fcrc, mbits, nwords = _FHDR.unpack(raw)
+            if fmagic != _FLT_MAGIC:
+                raise CorruptionError(
+                    f"segment {path}: bad filter magic", fid=meta["fid"])
+            payload = f.read(nwords * 4)
+    except FileNotFoundError as e:
+        raise CorruptionError(f"segment {path}: live file missing",
+                              fid=meta["fid"]) from e
+    except OSError as e:
+        raise TransientIOError(
+            e.errno or 5, f"segment {path}: filter read failed") from e
+    if len(payload) != nwords * 4:
+        raise CorruptionError(f"segment {path}: truncated filter payload",
+                              fid=meta["fid"])
+    if zlib.crc32(struct.pack("<II", mbits, nwords) + payload) != fcrc:
+        raise CorruptionError(f"segment {path}: filter CRC mismatch",
+                              fid=meta["fid"])
+    if mbits != nwords * 32 or (mbits & (mbits - 1)):
+        raise CorruptionError(f"segment {path}: bad filter shape",
+                              fid=meta["fid"])
+    _OBS_SEG_READ_BYTES.inc(_FHDR.size + len(payload))
+    return np.frombuffer(payload, "<u4").astype(np.uint32)
+
+
+def read_segment_filter(path: str) -> Optional[filters.PresenceFilter]:
+    """Load just the presence filter of a segment (header + 16-byte
+    section header + packed words — no body read, so rehydrating every
+    shard's filters on recovery stays cheap).  Returns ``None`` for v1
+    files: legacy segments have no filter and read as "always maybe"."""
+    meta = read_segment_header(path)
+    if meta["ver"] < 2:
+        return None
+    words = _read_filter_words(path, meta)
+    return filters.from_words(words, len(words) * 32)
 
 
 def read_segment(path: str, *, verify: bool = True

@@ -15,6 +15,12 @@ non-zero when the candidate regressed past the thresholds:
 Rows present on only one side are reported (new/retired benchmarks are
 normal across PRs) but never fail the gate; a schema mismatch or an
 unreadable file always does.  `make bench-compare BASE=... CAND=...`.
+
+``--schema-only`` skips every timing/amplification threshold and gates
+only on schema validity and row presence — the CI shape
+(``make bench-compare-prev``): a smoke-scale candidate's numbers are
+noise, but "the committed baseline still parses and its rows still
+exist" is exactly the bit-rot that silently breaks the trajectory.
 """
 from __future__ import annotations
 
@@ -105,14 +111,21 @@ def main() -> None:
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="ignore rows where both sides are faster than "
                          "this (timer noise floor, default 50 us)")
+    ap.add_argument("--schema-only", action="store_true",
+                    help="gate on schema + row presence only (no timing "
+                         "or amplification thresholds) — for CI runs "
+                         "where the candidate is smoke-scale")
     args = ap.parse_args()
     base, cand = _load(args.baseline), _load(args.candidate)
     res = compare(base, cand, threshold=args.threshold,
                   amp_threshold=args.amp_threshold, min_us=args.min_us)
+    if args.schema_only:
+        res["regressions"] = []
     print(f"bench-compare: {args.baseline} (pr {base.get('pr')}) vs "
           f"{args.candidate} (pr {cand.get('pr')}): "
           f"{res['compared']} compared, {res['improved']} improved, "
-          f"{len(res['regressions'])} regressed")
+          f"{len(res['regressions'])} regressed"
+          + (" [schema-only]" if args.schema_only else ""))
     if res["only_base"]:
         print(f"bench-compare: retired rows: {res['only_base']}")
     if res["only_cand"]:

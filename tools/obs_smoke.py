@@ -6,7 +6,9 @@ durable, once sharded durable — and schema-validates the per-phase metric
 reports: every phase must carry a well-formed ``lsmg-metrics-v1`` export
 (typed entries, complete histogram summaries) and the final phase must
 cover the per-layer families the observability model promises (store /
-storage / io / merge / read, plus shard in sharded mode).  This is the
+storage / io / merge / read, plus shard + compaction in sharded mode —
+the scheduler's decision enum is checked closed, and the read family
+must keep exporting the presence-filter counters).  This is the
 bit-rot gate for the metrics pipeline: an instrument that stops being
 registered, an exporter field that disappears, or a phase hook that stops
 firing all fail here before any dashboard notices.
@@ -99,6 +101,26 @@ def validate(report_path: str, want_phases: set, want_families: set,
         fail(f"[{tag}] durable run recorded no manifest bytes")
     if value_of("store", "state_publish_total") <= 0:
         fail(f"[{tag}] no StoreState publishes recorded")
+    # Presence-filter telemetry: the three read_filter_* series are
+    # registered per store at construction, so a durable run that stops
+    # exporting them means the read path lost its filter instrumentation.
+    read_fam = final["families"].get("read", {})
+    for m in ("filter_checked_total", "filter_skipped_total",
+              "filter_false_positive_total"):
+        if m not in read_fam:
+            fail(f"[{tag}] read family missing {m}")
+    if "compaction" in want_families:
+        # Scheduler decision stream: the enum is CLOSED — a new decision
+        # kind must be added here (and documented in repro.obs) on purpose.
+        comp = final["families"].get("compaction", {})
+        decisions = {e["labels"].get("decision")
+                     for e in comp.get("sched_decision_total", [])}
+        want = {"compact", "skip_hot", "skip_backoff", "idle"}
+        if decisions != want:
+            fail(f"[{tag}] compaction decision enum {sorted(decisions)} "
+                 f"!= {sorted(want)}")
+        if not comp.get("sched_interval_seconds"):
+            fail(f"[{tag}] compaction family missing sched_interval gauge")
     print(f"obs-smoke [{tag}]: {len(phases)} phases, "
           f"{n_entries} entries validated")
 
@@ -119,7 +141,7 @@ def main() -> None:
         validate(sharded,
                  want_phases={"ingest", "analytics", "queries",
                               "restart_verify"},
-                 want_families=base_families | {"shard"},
+                 want_families=base_families | {"shard", "compaction"},
                  tag="sharded-durable")
     print("obs-smoke OK")
 
